@@ -1,0 +1,37 @@
+"""Paper-validation benchmark 2: scheduler scaling study — the evaluation
+the paper defers to future work ("assess the trade-offs between the
+configuration parameters ... number of cores, the length of the vector
+registers ... and the size of the local scratchpads", §V).
+
+Sweeps cores x VLEN x scratchpad on ResNet50 and reports the WCET, so the
+design space the paper proposes to explore is actually explored here.
+"""
+
+from __future__ import annotations
+
+from repro.core import cnn
+from repro.core.wcet import analyze
+from repro.hw import scaled_paper_machine
+
+
+def run(csv_rows: list):
+    g = cnn.resnet50()
+    print("\n== Config-space sweep (ResNet50 WCET, ms) — paper §V ==")
+    print(f"{'cores':>6}{'vlen':>6}{'spad_KiB':>9}{'wcet_ms':>9}"
+          f"{'dominant':>26}{'fps':>7}")
+    for cores in (4, 8, 16, 32):
+        for vlen_bits in (256, 512, 1024):
+            for spad in (512 * 1024, 1024 * 1024, 2 * 1024 * 1024):
+                hw = scaled_paper_machine(
+                    cores, scratchpad_bytes=spad,
+                    vector_lanes=vlen_bits // 8)
+                rep, _, _, _ = analyze(g, hw, num_cores=cores,
+                                       validate=False)
+                print(f"{cores:>6}{vlen_bits:>6}{spad//1024:>9}"
+                      f"{rep.wcet_total_s*1e3:>9.1f}"
+                      f"{rep.dominant_term():>26}"
+                      f"{1/rep.wcet_total_s:>7.1f}")
+                csv_rows.append(
+                    (f"sweep/c{cores}_v{vlen_bits}_s{spad//1024}",
+                     rep.wcet_total_s * 1e6,
+                     f"dominant={rep.dominant_term().split()[0]}"))

@@ -1,0 +1,52 @@
+"""Paper-validation benchmark 3: predictable LM serving — per-token WCET
+bounds from the paper pipeline applied to the assigned archs, plus actual
+engine throughput on the reduced configs (CPU)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.hw import TPU_V5E
+from repro.models import init_params
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.predictable import analyze_decode
+
+
+def run(csv_rows: list):
+    print("\n== Per-token decode WCET bounds (paper pipeline -> LM archs, "
+          "TPU-v5e model, 16 workers) ==")
+    print(f"{'arch':<22}{'batch':>6}{'cache':>7}{'wcet_ms/token':>14}"
+          f"{'dominant':>26}")
+    for arch, batch, cache in (("smollm-135m", 16, 2048),
+                               ("rwkv6-1.6b", 16, 2048),
+                               ("zamba2-1.2b", 16, 2048),
+                               ("mixtral-8x22b", 8, 2048),
+                               ("qwen1.5-110b", 8, 2048)):
+        cfg = get_config(arch)
+        rep = analyze_decode(cfg, batch, cache, TPU_V5E, num_cores=16,
+                             max_layers=2)
+        print(f"{arch:<22}{batch:>6}{cache:>7}"
+              f"{rep.per_token_wcet_s*1e3:>14.3f}"
+              f"{rep.wcet.dominant_term():>26}")
+        csv_rows.append((f"serve_wcet/{arch}", rep.per_token_wcet_s * 1e6,
+                         f"dominant={rep.wcet.dominant_term().split()[0]}"))
+
+    print("\n== Engine throughput (reduced smollm, CPU) ==")
+    cfg = get_config("smollm-135m", reduced=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, batch_size=4, max_len=96)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=list(rng.integers(1, 400, 8)),
+                    max_new_tokens=16) for i in range(4)]
+    t0 = time.perf_counter()
+    eng.generate(reqs)
+    dt = time.perf_counter() - t0
+    tps = eng.metrics["tokens"] / dt
+    print(f"  {eng.metrics['tokens']} tokens in {dt:.2f}s = "
+          f"{tps:.1f} tok/s (batch 4, CPU reduced config)")
+    csv_rows.append(("serve_engine/reduced_cpu", dt * 1e6,
+                     f"tok_per_s={tps:.1f}"))

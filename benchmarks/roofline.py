@@ -1,0 +1,85 @@
+"""§Roofline table generator: reads the dry-run records
+(experiments/dryrun.jsonl + any later re-sweeps, newest record per cell
+wins) and renders the per-(arch x shape x mesh) three-term table for
+EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DEFAULT_GLOBS = ("experiments/dryrun*.jsonl",)
+
+
+def load_records(patterns=DEFAULT_GLOBS) -> dict:
+    """Newest record per (arch, shape, mesh) across all sweep files."""
+    recs: dict[tuple, dict] = {}
+    files: list[str] = []
+    for p in patterns:
+        files += sorted(glob.glob(p), key=os.path.getmtime)
+    for f in files:
+        for line in open(f):
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_table(recs: dict, mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | t_compute (s) | t_memory (s) | t_collective (s)"
+        " | dominant | 6ND/HLO | roofline MFU |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, m), r in sorted(recs.items()):
+        if m != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {arch} | {shape} | — | — | — | "
+                         f"skipped: {r['reason'][:60]} | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {arch} | {shape} | — | — | — | ERROR | — | — |")
+            continue
+        ro = r["roofline"]
+        lines.append(
+            f"| {arch} | {shape} | {ro['t_compute_s']:.4g} | "
+            f"{ro['t_memory_s']:.4g} | {ro['t_collective_s']:.4g} | "
+            f"{ro['dominant']} | {ro['useful_ratio']:.3f} | "
+            f"{ro['roofline_mfu']:.4f} |")
+    return "\n".join(lines)
+
+
+def run(csv_rows: list):
+    recs = load_records()
+    ok = [r for r in recs.values() if r["status"] == "ok"]
+    skipped = [r for r in recs.values() if r["status"] == "skipped"]
+    errors = [r for r in recs.values() if r["status"] == "error"]
+    print("\n== Roofline summary (from dry-run artifacts) ==")
+    print(f"cells: ok={len(ok)} skipped={len(skipped)} "
+          f"errors={len(errors)}")
+    if errors:
+        for r in errors:
+            print("  ERROR:", r["arch"], r["shape"], r["mesh"],
+                  r["reason"][:120])
+    by_dom: dict[str, int] = {}
+    for r in ok:
+        d = r["roofline"]["dominant"]
+        by_dom[d] = by_dom.get(d, 0) + 1
+    print("dominant-term histogram:", by_dom)
+    for r in ok:
+        ro = r["roofline"]
+        csv_rows.append(
+            (f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+             max(ro["t_compute_s"], ro["t_memory_s"],
+                 ro["t_collective_s"]) * 1e6,
+             f"dom={ro['dominant']};mfu={ro['roofline_mfu']:.4f}"))
+    print(fmt_table(recs))
+
+
+if __name__ == "__main__":
+    rows: list = []
+    run(rows)

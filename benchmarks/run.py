@@ -1,0 +1,48 @@
+"""Benchmark harness — one section per paper claim/table:
+
+  bench_wcet      WCET composition + vs-TDMA + mapping ablation
+                  (paper Abstract, §II, §III.B)
+  bench_schedule  cores x VLEN x scratchpad design-space sweep (paper §V)
+  bench_kernels   worker-core kernels (int8 GEMM / conv-im2col; §IV.A)
+  bench_serving   per-token WCET for the assigned LM archs + engine
+  roofline        §Roofline table from the multi-pod dry-run artifacts
+
+Prints ``name,us_per_call,derived`` CSV at the end (harness contract).
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    csv_rows: list[tuple] = []
+    from . import bench_wcet, bench_schedule, bench_kernels, \
+        bench_serving, roofline
+    sections = [
+        ("wcet", lambda: (bench_wcet.run(csv_rows),
+                          bench_wcet.run_mapping_ablation(csv_rows))),
+        ("schedule_sweep", lambda: bench_schedule.run(csv_rows)),
+        ("kernels", lambda: bench_kernels.run(csv_rows)),
+        ("serving", lambda: bench_serving.run(csv_rows)),
+        ("roofline", lambda: roofline.run(csv_rows)),
+    ]
+    failed = []
+    for name, fn in sections:
+        try:
+            fn()
+        except Exception:  # noqa: BLE001 — report all sections
+            failed.append(name)
+            traceback.print_exc()
+    print("\n== CSV ==")
+    print("name,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.2f},{derived}")
+    if failed:
+        print(f"FAILED sections: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

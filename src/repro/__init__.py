@@ -1,0 +1,5 @@
+"""repro: predictable NN inference (Kirschner et al. 2024) re-targeted to
+TPU pods — static DMA scheduling + compositional WCET as a first-class
+framework feature, plus the training/serving substrate around it."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,27 @@
+"""repro.core — the paper's contribution: a compiler that turns a static
+operator graph into (subtasks, core mapping, static DMA schedule, WCET bound)
+for an interference-free multicore scratchpad machine.
+
+Pipeline (paper Fig. 2):
+    Graph --Partitioner--> [Subtask] --map_reverse_affinity--> Mapping
+          --compute_schedule--> StaticSchedule --wcet.analyze--> WCETReport
+          --execute_schedule--> numerics (bit-exact vs reference_forward)
+"""
+
+from .graph import Graph, OpNode, TensorSpec
+from .partition import Partitioner, Subtask, Transfer, PartitionError
+from .mapping import Mapping, map_reverse_affinity, map_round_robin
+from .schedule import (StaticSchedule, DMASlot, ComputeSlot, ScheduleError,
+                       compute_schedule, validate_schedule)
+from .wcet import WCETReport, analyze, critical_path, subtask_wcet
+from .executor import reference_forward, execute_schedule, init_params
+from . import cnn, quantize
+
+__all__ = [
+    "Graph", "OpNode", "TensorSpec", "Partitioner", "Subtask", "Transfer",
+    "PartitionError", "Mapping", "map_reverse_affinity", "map_round_robin",
+    "StaticSchedule", "DMASlot", "ComputeSlot", "ScheduleError",
+    "compute_schedule", "validate_schedule", "WCETReport", "analyze",
+    "critical_path", "subtask_wcet", "reference_forward", "execute_schedule",
+    "init_params", "cnn", "quantize",
+]

@@ -1,0 +1,224 @@
+"""Numerical execution of the compiled artifact.
+
+Two paths:
+
+* ``reference_forward`` — whole-graph int8 interpreter (the numerical oracle;
+  conv is evaluated as im2col+GEMM with int32 accumulation, exactly the
+  semantics the worker cores implement).
+* ``execute_schedule`` — replays the static schedule subtask-by-subtask in
+  compute-slot time order, each GEMM/conv subtask computing only its tile
+  from its (modelled) scratchpad-resident operands. Int arithmetic makes the
+  comparison against ``reference_forward`` *bit-exact* — this is the
+  correctness proof of the partition/mapping/schedule pipeline.
+
+Numerics are numpy (mutable tile buffers); the Pallas kernel path
+(`repro.kernels.gemm_int8`) implements the identical tile computation for
+the TPU target and is tested against the same oracle.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .graph import Graph, OpNode, conv_out_hw
+from .partition import Subtask
+from .mapping import Mapping
+from .schedule import StaticSchedule
+
+
+# -- primitives ---------------------------------------------------------------
+
+def im2col(x: np.ndarray, kh: int, kw: int, stride: int,
+           pad: int) -> np.ndarray:
+    """(H, W, C) -> (oh*ow, kh*kw*C); zero padding (symmetric zero-point)."""
+    H, W, C = x.shape
+    xp = np.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    oh = (H + 2 * pad - kh) // stride + 1
+    ow = (W + 2 * pad - kw) // stride + 1
+    cols = np.empty((oh * ow, kh * kw * C), dtype=x.dtype)
+    idx = 0
+    for i in range(oh):
+        for j in range(ow):
+            patch = xp[i * stride:i * stride + kh,
+                       j * stride:j * stride + kw, :]
+            cols[idx] = patch.reshape(-1)
+            idx += 1
+    return cols
+
+
+def _requant_np(acc: np.ndarray, mult) -> np.ndarray:
+    y = np.round(acc.astype(np.float64) * mult)   # round-half-even == jnp
+    return np.clip(y, -128, 127).astype(np.int8)
+
+
+def _sat_add(a: np.ndarray, b: np.ndarray, dtype) -> np.ndarray:
+    s = a.astype(np.int32) + b.astype(np.int32)
+    if np.dtype(dtype) == np.int8:
+        return np.clip(s, -128, 127).astype(np.int8)
+    return s.astype(dtype)
+
+
+def _maxpool(x: np.ndarray, k: int, s: int, p: int) -> np.ndarray:
+    fill = np.iinfo(x.dtype).min if np.issubdtype(x.dtype, np.integer) \
+        else -np.inf
+    xp = np.pad(x, ((p, p), (p, p), (0, 0)), constant_values=fill)
+    H, W, C = xp.shape
+    oh, ow = (H - k) // s + 1, (W - k) // s + 1
+    out = np.full((oh, ow, C), fill, dtype=x.dtype)
+    for di in range(k):
+        for dj in range(k):
+            out = np.maximum(out, xp[di:di + oh * s:s, dj:dj + ow * s:s, :])
+    return out
+
+
+def _avgpool(x: np.ndarray, k: int, s: int, p: int) -> np.ndarray:
+    xp = np.pad(x, ((p, p), (p, p), (0, 0))).astype(np.int32)
+    H, W, C = xp.shape
+    oh, ow = (H - k) // s + 1, (W - k) // s + 1
+    acc = np.zeros((oh, ow, C), dtype=np.int32)
+    for di in range(k):
+        for dj in range(k):
+            acc += xp[di:di + oh * s:s, dj:dj + ow * s:s, :]
+    out = np.round(acc / (k * k))
+    return np.clip(out, -128, 127).astype(x.dtype)
+
+
+_NP_DT = {"int8": np.int8, "int32": np.int32, "f32": np.float32,
+          "bf16": np.float32, "int16": np.int16, "uint8": np.uint8}
+
+
+def init_params(g: Graph, seed: int = 0) -> dict[str, np.ndarray]:
+    """Random int8 weights + range-preserving requant multipliers."""
+    rng = np.random.default_rng(seed)
+    params: dict[str, np.ndarray] = {}
+    for op in g.ops:
+        for w in op.weights:
+            spec = g.tensors[w]
+            params[w] = rng.integers(-64, 64, size=spec.shape,
+                                     endpoint=False).astype(np.int8)
+        if op.kind == "requant":
+            prod = g.producer_of(op.inputs[0])
+            K = 1
+            if prod is not None:
+                pop = g.op(prod)
+                if pop.kind == "gemm":
+                    K = pop.attrs["K"]
+                elif pop.kind == "conv2d":
+                    K = pop.attrs["kh"] * pop.attrs["kw"] * pop.attrs["C_in"]
+            params[f"{op.name}.mult"] = np.float32(0.03 / np.sqrt(K))
+    return params
+
+
+def _eval_op(op: OpNode, g: Graph, params: dict,
+             vals: dict[str, np.ndarray]) -> np.ndarray:
+    k = op.kind
+    if k == "gemm":
+        x = vals[op.inputs[0]].reshape(op.attrs["M"], op.attrs["K"])
+        w = params[op.weights[0]]
+        return (x.astype(np.int32) @ w.astype(np.int32)).astype(
+            _NP_DT[g.tensors[op.outputs[0]].dtype])
+    if k == "conv2d":
+        a = op.attrs
+        cols = im2col(vals[op.inputs[0]], a["kh"], a["kw"], a["stride"],
+                      a["padding"])
+        w = params[op.weights[0]]
+        acc = cols.astype(np.int32) @ w.astype(np.int32)
+        oh, ow = conv_out_hw(a)
+        return acc.reshape(oh, ow, a["C_out"])
+    if k == "requant":
+        return _requant_np(vals[op.inputs[0]], params[f"{op.name}.mult"])
+    if k == "relu":
+        x = vals[op.inputs[0]]
+        return np.maximum(x, 0)
+    if k == "add":
+        return _sat_add(vals[op.inputs[0]], vals[op.inputs[1]],
+                        _NP_DT[g.tensors[op.outputs[0]].dtype])
+    if k == "maxpool":
+        a = op.attrs
+        return _maxpool(vals[op.inputs[0]], a["k"], a["stride"],
+                        a.get("padding", 0))
+    if k == "avgpool":
+        a = op.attrs
+        return _avgpool(vals[op.inputs[0]], a["k"], a["stride"],
+                        a.get("padding", 0))
+    if k == "gap":
+        x = vals[op.inputs[0]].astype(np.int32)
+        m = np.round(x.mean(axis=(0, 1), keepdims=False))
+        out = np.clip(m, -128, 127).astype(np.int8).reshape(1, -1)
+        return out
+    if k == "concat":
+        return np.concatenate([vals[t] for t in op.inputs], axis=-1)
+    raise NotImplementedError(f"op kind {k}")
+
+
+def reference_forward(g: Graph, params: dict,
+                      inputs: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
+    vals = dict(inputs)
+    for op in g.ops:
+        vals[op.outputs[0]] = _eval_op(op, g, params, vals)
+    return vals
+
+
+# -- schedule replay ----------------------------------------------------------
+
+def execute_schedule(g: Graph, params: dict, inputs: dict[str, np.ndarray],
+                     subtasks: list[Subtask], mapping: Mapping,
+                     sched: StaticSchedule) -> dict[str, np.ndarray]:
+    """Replay subtasks in schedule order, computing tile-by-tile."""
+    by_id = {st.sid: st for st in subtasks}
+    ops = {op.name: op for op in g.ops}
+    bufs: dict[str, np.ndarray] = {}
+    for name, spec in g.tensors.items():
+        if name in inputs:
+            bufs[name] = np.asarray(inputs[name], dtype=_NP_DT[spec.dtype])
+        elif name in params:
+            bufs[name] = params[name]
+        else:
+            bufs[name] = np.zeros(spec.shape, dtype=_NP_DT[spec.dtype])
+    im2col_cache: dict[str, np.ndarray] = {}
+    full_cache: dict[str, np.ndarray] = {}
+
+    for slot in sorted(sched.compute, key=lambda s: (s.start, s.sid)):
+        st = by_id[slot.sid]
+        op = ops[st.op_name]
+        t = st.tile
+        if st.kind == "gemm":
+            m0, m1, n0, n1 = t["m0"], t["m1"], t["n0"], t["n1"]
+            x = bufs[op.inputs[0]].reshape(op.attrs["M"], op.attrs["K"])
+            w = bufs[op.weights[0]]
+            acc = x[m0:m1].astype(np.int32) @ w[:, n0:n1].astype(np.int32)
+            y = bufs[op.outputs[0]]
+            y.reshape(op.attrs["M"], op.attrs["N"])[m0:m1, n0:n1] = acc
+        elif st.kind == "conv2d":
+            a = op.attrs
+            key = op.name
+            if key not in im2col_cache:
+                im2col_cache[key] = im2col(bufs[op.inputs[0]], a["kh"],
+                                           a["kw"], a["stride"], a["padding"])
+            cols = im2col_cache[key]
+            m0, m1, n0, n1 = t["m0"], t["m1"], t["n0"], t["n1"]
+            w = bufs[op.weights[0]]
+            acc = cols[m0:m1].astype(np.int32) @ w[:, n0:n1].astype(np.int32)
+            oh, ow = conv_out_hw(a)
+            y = bufs[op.outputs[0]].reshape(oh * ow, a["C_out"])
+            y[m0:m1, n0:n1] = acc
+        elif st.kind in ("requant", "relu", "add"):
+            r0, r1 = t["r0"], t["r1"]
+            if st.kind == "requant":
+                bufs[op.outputs[0]][r0:r1] = _requant_np(
+                    bufs[op.inputs[0]][r0:r1], params[f"{op.name}.mult"])
+            elif st.kind == "relu":
+                bufs[op.outputs[0]][r0:r1] = np.maximum(
+                    bufs[op.inputs[0]][r0:r1], 0)
+            else:
+                bufs[op.outputs[0]][r0:r1] = _sat_add(
+                    bufs[op.inputs[0]][r0:r1], bufs[op.inputs[1]][r0:r1],
+                    bufs[op.outputs[0]].dtype)
+        else:
+            # windowed / global ops: evaluate once, write the tile's rows
+            if st.op_name not in full_cache:
+                vals = {tn: bufs[tn] for tn in op.inputs}
+                full_cache[st.op_name] = _eval_op(op, g, params, vals)
+            r0, r1 = t["r0"], t["r1"]
+            bufs[op.outputs[0]][r0:r1] = full_cache[st.op_name][r0:r1]
+    return bufs

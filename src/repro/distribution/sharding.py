@@ -1,0 +1,230 @@
+"""Sharding rules: DP / TP / EP / SP (+ pod-level DP) as PartitionSpecs.
+
+Path-based rules over plain-dict param trees. Conventions:
+
+  * mesh axes: ("data", "model") single-pod, ("pod", "data", "model")
+    multi-pod; `pod` is pure data parallelism.
+  * TP (model axis): attention QKV/O and MLP in/out projections Megatron
+    style; embedding/vocab sharded on the vocab dim.
+  * EP: expert dim sharded over `model` when divisible (arctic 128/16),
+    otherwise TP inside experts (mixtral 8 experts -> shard d_ff).
+  * ZeRO-1: optimizer moments additionally sharded over `data` on the first
+    dim that is not already sharded (GSPMD then emits reduce-scatter /
+    all-gather pairs around the update instead of full all-reduce).
+  * KV caches: batch over (pod, data) when divisible, else sequence over
+    (pod, data) (long_500k, global_batch=1); kv-head dim over `model` when
+    divisible, else head_dim.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+
+
+def _dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _tp(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def _dp(mesh: Mesh) -> int:
+    n = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        n *= mesh.shape["pod"]
+    return n
+
+
+def _div(n: int, d: int) -> bool:
+    return n % d == 0
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        p.key if hasattr(p, "key") else str(getattr(p, "idx", p))
+        for p in path)
+
+
+def param_pspec(path_s: str, shape: tuple, cfg: ModelConfig,
+                tp: int, n_data: int = 0) -> P:
+    """PartitionSpec for one parameter leaf (layer-stacked leaves have a
+    leading L dim which is never sharded)."""
+    nd = len(shape)
+
+    def last_if(divisible_dim: int):
+        """Shard last dim over model if divisible, else replicate."""
+        return P(*([None] * (nd - 1) + ["model"])) \
+            if _div(shape[divisible_dim], tp) else P()
+
+    def dim_spec(dim: int):
+        spec = [None] * nd
+        spec[dim] = "model"
+        return P(*spec) if _div(shape[dim], tp) else P()
+
+    # embeddings
+    if path_s.endswith("embed/table"):
+        return dim_spec(0)                       # vocab sharded
+    if path_s.endswith("lm_head/w"):
+        return dim_spec(nd - 1)                  # vocab sharded
+    # norms, biases, scalars, token-shift mixes: replicate
+    if any(k in path_s for k in ("ln", "norm", "scale", "bias", "mix_",
+                                 "cmix", "d_skip", "a_log", "/u")):
+        return P()
+    # MoE
+    if "moe/router" in path_s:
+        return P()
+    if "/moe/" in path_s:                        # (L, E, D, F) or (L, E, F, D)
+        f_dim = 3 if path_s.endswith(("wi", "wg")) else 2
+        if n_data and _div(shape[1], n_data) and _div(shape[f_dim], tp):
+            # 2-D expert sharding: EP over data + TP over model — the
+            # dispatch buffers reshard (B->E) with a small all-to-all
+            # instead of FSDP-gathering the expert weights every step
+            spec = [None] * nd
+            spec[1] = "data"
+            spec[f_dim] = "model"
+            return P(*spec)
+        if _div(shape[1], tp):
+            return P(None, "model")              # EP over model
+        # TP inside experts: shard the F dim (wi/wg: last; wo: dim 2)
+        return dim_spec(f_dim)
+    # column-parallel (output dim sharded)
+    if path_s.endswith(("wq", "wk", "wv", "wi", "wg", "in_proj", "bc_proj",
+                        "dt_proj", "wr", "ck", "cr", "w_proj", "conv_w")):
+        return dim_spec(nd - 1)
+    # row-parallel (input dim sharded)
+    if path_s.endswith(("wo", "out_proj", "cv")):
+        return dim_spec(nd - 2)
+    return P()
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params_tree: Any):
+    """Tree of NamedShardings matching `params_tree` (arrays or SDS).
+
+    cfg.fsdp=True additionally shards every large leaf over `data` on its
+    first free dim (ZeRO-3: XLA all-gathers each layer's weights at use
+    inside the layer scan; required to fit 110B-param training state on
+    16 GB v5e HBM — see EXPERIMENTS.md §Perf qwen iterations)."""
+    tp = _tp(mesh)
+    n_data = mesh.shape["data"]
+
+    def spec(path, leaf):
+        base = param_pspec(_path_str(path), leaf.shape, cfg, tp,
+                           n_data=n_data)
+        flat = [ax for ax in jax.tree.leaves(tuple(base))]
+        if cfg.fsdp and leaf.size >= 1 << 20 and "data" not in flat:
+            specs = list(base) + [None] * (len(leaf.shape) - len(base))
+            for i, (dim, cur) in enumerate(zip(leaf.shape, specs)):
+                if cur is None and dim % n_data == 0 and dim >= n_data:
+                    specs[i] = "data"
+                    break
+            base = P(*specs)
+        return NamedSharding(mesh, base)
+
+    return jax.tree_util.tree_map_with_path(spec, params_tree)
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, batch_tree: Any):
+    """Batch dims over (pod, data); everything else replicated."""
+    dp = _dp_axes(mesh)
+    n_dp = _dp(mesh)
+
+    def spec(path, leaf):
+        b = leaf.shape[0] if leaf.shape else 0
+        if b and _div(b, n_dp):
+            return NamedSharding(mesh,
+                                 P(dp, *([None] * (len(leaf.shape) - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(spec, batch_tree)
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_tree: Any):
+    """KV/state caches: (L, B, H, S, hd) and friends."""
+    dp = _dp_axes(mesh)
+    n_dp = _dp(mesh)
+    tp = _tp(mesh)
+
+    def spec(path, leaf):
+        s = leaf.shape
+        p = _path_str(path)
+        if not s:                                 # pos scalar
+            return NamedSharding(mesh, P())
+        if p.endswith(("k", "v", "xk", "xv")) and len(s) == 5:
+            L, B, H, S, hd = s
+            batch_ax = dp if _div(B, n_dp) else None
+            head_ax = "model" if _div(H, tp) else None
+            # heads not TP-divisible: shard the sequence over model instead
+            # (decode softmax then needs only tiny max/sum collectives,
+            # vs per-layer full-logit all-reduces for head_dim sharding)
+            seq_ax = None
+            if head_ax is None:
+                if batch_ax is None and _div(S, n_dp * tp):
+                    seq_ax = dp + ("model",)
+                elif _div(S, tp):
+                    seq_ax = "model"
+            return NamedSharding(mesh, P(None, batch_ax, head_ax, seq_ax,
+                                         None))
+        if p.endswith(("k_scale", "v_scale")) and len(s) == 4:
+            # (L, B, H, S) int8-KV scales: mirror the 5-D cache sharding
+            L, B, H, S = s
+            batch_ax = dp if _div(B, n_dp) else None
+            head_ax = "model" if _div(H, tp) else None
+            seq_ax = None
+            if head_ax is None:
+                if batch_ax is None and _div(S, n_dp * tp):
+                    seq_ax = dp + ("model",)
+                elif _div(S, tp):
+                    seq_ax = "model"
+            return NamedSharding(mesh, P(None, batch_ax, head_ax, seq_ax))
+        if p.endswith("wkv") and len(s) == 5:     # (L, B, H, dk, dv)
+            L, B, H, dk, dv = s
+            batch_ax = dp if _div(B, n_dp) else None
+            head_ax = "model" if _div(H, tp) else None
+            return NamedSharding(mesh, P(None, batch_ax, head_ax, None,
+                                         None))
+        if p.endswith("ssm_state") and len(s) == 4:  # (L, B, Din, N)
+            L, B, Din, N = s
+            batch_ax = dp if _div(B, n_dp) else None
+            ch_ax = "model" if _div(Din, tp) else None
+            return NamedSharding(mesh, P(None, batch_ax, ch_ax, None))
+        if len(s) >= 2:                           # conv / last_* caches
+            B = s[1]
+            batch_ax = dp if _div(B, n_dp) else None
+            return NamedSharding(mesh,
+                                 P(None, batch_ax,
+                                   *([None] * (len(s) - 2))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+def zero1_shardings(cfg: ModelConfig, mesh: Mesh, params_tree: Any):
+    """Optimizer-moment shardings: param spec + `data` on the first free dim.
+
+    This is ZeRO-1 expressed in GSPMD: states sharded over data parallel
+    ranks; XLA turns the gradient all-reduce + update into
+    reduce-scatter + local update + all-gather of the new params.
+    """
+    tp = _tp(mesh)
+    n_data = mesh.shape["data"]
+
+    def spec(path, leaf):
+        base = param_pspec(_path_str(path), leaf.shape, cfg, tp)
+        specs = list(base) + [None] * (len(leaf.shape) - len(base))
+        for i, (dim, cur) in enumerate(zip(leaf.shape, specs)):
+            if cur is None and dim % n_data == 0 and dim >= n_data:
+                specs[i] = "data"
+                break
+        return NamedSharding(mesh, P(*specs))
+
+    return jax.tree_util.tree_map_with_path(spec, params_tree)
+
+
+def replicated(mesh: Mesh, tree: Any):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

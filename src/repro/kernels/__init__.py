@@ -1,0 +1,14 @@
+"""Pallas TPU kernels (validated on CPU via interpret mode) + jnp oracles.
+
+Layout per kernel: <name>.py holds the pl.pallas_call + BlockSpec tiling,
+ops.py the jitted dispatch wrapper, ref.py the pure-jnp oracle.
+"""
+
+from . import ops, ref
+from .gemm_int8 import gemm_int8_pallas
+from .conv2d_im2col import conv2d_int8_pallas
+from .flash_attention import flash_attention_pallas
+from .ssm_scan import ssm_scan_pallas
+
+__all__ = ["ops", "ref", "gemm_int8_pallas", "conv2d_int8_pallas",
+           "flash_attention_pallas", "ssm_scan_pallas"]

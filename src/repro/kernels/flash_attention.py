@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: fused blockwise attention (FlashAttention-style) with
+GQA head grouping, causal masking, decode offset, and sliding windows.
+
+TPU adaptation notes (vs the CUDA original): the online-softmax state
+(m, l, acc) lives in VMEM scratch across the kv grid dimension — TPU grids
+iterate sequentially on a core, so the running state is carried for free
+where a GPU version re-synchronizes via shared memory. Block shapes are
+(128, head_dim)-aligned for the MXU.
+
+Used by the LM serving path on TPU; the pure-jnp oracle (ref.flash_attention)
+is the CPU / dry-run dispatch target.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _make_kernel(bq: int, bk: int, skv: int, sq: int,
+                 causal: bool, window: int | None, scale: float):
+    offs = skv - sq
+
+    def kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+        i = pl.program_id(1)
+        j = pl.program_id(2)
+
+        @pl.when(j == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + offs
+        kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        # also mask kv padding
+        mask &= kpos < skv
+
+        # block-level skip: fully-masked tiles do no work
+        any_valid = jnp.bool_(True)
+        if causal:
+            any_valid = jnp.logical_and(
+                any_valid, (j * bk) <= (i * bq + offs + bq - 1))
+        if window is not None:
+            any_valid = jnp.logical_and(
+                any_valid, (j + 1) * bk - 1 > (i * bq + offs - window))
+
+        @pl.when(any_valid)
+        def _block():
+            q = q_ref[0].astype(jnp.float32) * scale
+            k = k_ref[0].astype(jnp.float32)
+            v = v_ref[0].astype(jnp.float32)
+            s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+            s = jnp.where(mask, s, _NEG_INF)
+            m_prev = m_ref[...]
+            m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            p = jnp.where(mask, p, 0.0)
+            corr = jnp.exp(m_prev - m_new)
+            l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+            acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            m_ref[...] = m_new
+
+        @pl.when(j == pl.num_programs(2) - 1)
+        def _store():
+            denom = jnp.maximum(l_ref[...], 1e-30)
+            o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "bq", "bk", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           *, causal: bool = True, window: int | None = None,
+                           bq: int = 128, bk: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q (B,Hq,Sq,D), k/v (B,Hkv,Skv,D) -> (B,Hq,Sq,D)."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Hq % Hkv == 0
+    g = Hq // Hkv
+    scale = 1.0 / (D ** 0.5)
+
+    bq_ = min(bq, Sq)
+    bk_ = min(bk, Skv)
+    Sqp = -(-Sq // bq_) * bq_
+    Skp = -(-Skv // bk_) * bk_
+    qr = jnp.pad(q, ((0, 0), (0, 0), (0, Sqp - Sq), (0, 0))) \
+        .reshape(B * Hq, Sqp, D)
+    kr = jnp.pad(k, ((0, 0), (0, 0), (0, Skp - Skv), (0, 0))) \
+        .reshape(B * Hkv, Skp, D)
+    vr = jnp.pad(v, ((0, 0), (0, 0), (0, Skp - Skv), (0, 0))) \
+        .reshape(B * Hkv, Skp, D)
+
+    def kv_index(bh, i, j):
+        return ((bh // Hq) * Hkv + (bh % Hq) // g, j, 0)
+
+    kernel = _make_kernel(bq_, bk_, Skv, Sq, causal, window, scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, Sqp // bq_, Skp // bk_),
+        in_specs=[
+            pl.BlockSpec((1, bq_, D), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, bk_, D), kv_index),
+            pl.BlockSpec((1, bk_, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq_, D), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sqp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, 1), jnp.float32),
+            pltpu.VMEM((bq_, 1), jnp.float32),
+            pltpu.VMEM((bq_, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out[:, :Sq].reshape(B, Hq, Sq, D)

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: int8 x int8 -> int32 tiled GEMM with optional fused
+per-channel requantization epilogue.
+
+This is the paper's worker-core inner loop, re-targeted from Vicuna
+(512-bit vector registers, Zve32x int8 MACs, 1 MiB scratchpad) to the TPU
+MXU (128x128 systolic, int8 path at 2x bf16 rate, VMEM scratchpad):
+
+  * BlockSpec tiling (bm, bn, bk) is the TPU analogue of the compiler's
+    scratchpad GEMM tiles — HBM->VMEM streaming with double buffering is
+    emitted by the Pallas grid pipeline, exactly the dual-ported-scratchpad
+    DMA overlap the paper builds in hardware.
+  * accumulation stays in an int32 VMEM scratch tile across the K grid
+    dimension (paper: int32 accumulators in the vector registers).
+  * the epilogue folds the int32 tile to int8 via the same fixed-point
+    requant math as `repro.core.quantize.requantize` (bit-exact).
+
+Block shapes default to MXU-aligned (128, 128, 128); VMEM footprint =
+bm*bk + bk*bn (int8) + bm*bn*4 (acc) + out tile, well under the ~128 MiB
+VMEM with room for Pallas' double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref, acc_ref):
+    """Grid (Mi, Nj, Kk); K innermost -> acc tile lives across K steps."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _store():
+        o_ref[...] = acc_ref[...]
+
+
+def _gemm_requant_kernel(x_ref, w_ref, m_ref, o_ref, acc_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _store():
+        y = jnp.round(acc_ref[...].astype(jnp.float32) * m_ref[...])
+        o_ref[...] = jnp.clip(y, -128, 127).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def gemm_int8_pallas(x: jax.Array, w: jax.Array,
+                     requant_mult: jax.Array | None = None,
+                     *, bm: int = 128, bn: int = 128, bk: int = 128,
+                     interpret: bool = False) -> jax.Array:
+    """x (M,K) int8 @ w (K,N) int8 -> int32 (or int8 if requant_mult given).
+
+    Shapes are padded to block multiples; padding contributes zeros to the
+    accumulator so results are exact.
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (x.shape, w.shape)
+    bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
+    Mp, Np, Kp = -(-M // bm_) * bm_, -(-N // bn_) * bn_, -(-K // bk_) * bk_
+    xp = jnp.pad(x, ((0, Mp - M), (0, Kp - K)))
+    wp = jnp.pad(w, ((0, Kp - K), (0, Np - N)))
+    grid = (Mp // bm_, Np // bn_, Kp // bk_)
+
+    if requant_mult is None:
+        out = pl.pallas_call(
+            _gemm_kernel,
+            grid=grid,
+            in_specs=[pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),
+                      pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j))],
+            out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.int32),
+            scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.int32)],
+            interpret=interpret,
+        )(xp, wp)
+    else:
+        mp = jnp.pad(requant_mult.astype(jnp.float32), (0, Np - N))
+        out = pl.pallas_call(
+            _gemm_requant_kernel,
+            grid=grid,
+            in_specs=[pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),
+                      pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)),
+                      pl.BlockSpec((1, bn_), lambda i, j, k: (0, j))],
+            out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.int8),
+            scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.int32)],
+            interpret=interpret,
+        )(xp, wp, mp.reshape(1, Np))
+    return out[:M, :N]

@@ -1,0 +1,74 @@
+"""Jitted public wrappers for the kernel package with backend dispatch.
+
+Backends:
+  * "pallas"    — real TPU lowering (deployment target)
+  * "interpret" — Pallas interpret mode (CPU correctness validation; what the
+                  kernel tests use)
+  * "ref"       — pure-jnp oracle (CPU model runs and all dry-run lowering,
+                  since Pallas cannot lower to the CPU XLA backend)
+  * "auto"      — "pallas" on TPU, "ref" otherwise
+
+Model code calls these wrappers only; the choice of backend never changes
+numerics beyond float reassociation (integer paths are bit-exact).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .gemm_int8 import gemm_int8_pallas
+from .conv2d_im2col import conv2d_int8_pallas
+from .flash_attention import flash_attention_pallas
+from .ssm_scan import ssm_scan_pallas
+
+_DEFAULT_BACKEND = "auto"
+
+
+def set_default_backend(name: str) -> None:
+    global _DEFAULT_BACKEND
+    assert name in ("auto", "pallas", "interpret", "ref")
+    _DEFAULT_BACKEND = name
+
+
+def _resolve(backend: str | None) -> str:
+    b = backend or _DEFAULT_BACKEND
+    if b == "auto":
+        platform = jax.default_backend()
+        return "pallas" if platform == "tpu" else "ref"
+    return b
+
+
+def gemm_int8(x, w, requant_mult=None, *, backend: str | None = None,
+              **blocks):
+    b = _resolve(backend)
+    if b == "ref":
+        return ref.gemm_int8(x, w, requant_mult)
+    return gemm_int8_pallas(x, w, requant_mult,
+                            interpret=(b == "interpret"), **blocks)
+
+
+def conv2d_int8(x, w, *, kh, kw, stride=1, padding=0,
+                backend: str | None = None, **blocks):
+    b = _resolve(backend)
+    if b == "ref":
+        return ref.conv2d_int8(x, w, stride=stride, padding=padding)
+    return conv2d_int8_pallas(x, w, kh=kh, kw=kw, stride=stride,
+                              padding=padding,
+                              interpret=(b == "interpret"), **blocks)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    backend: str | None = None, **blocks):
+    b = _resolve(backend)
+    if b == "ref":
+        return ref.flash_attention(q, k, v, causal=causal, window=window)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  interpret=(b == "interpret"), **blocks)
+
+
+def ssm_scan(a, x, *, backend: str | None = None, **blocks):
+    b = _resolve(backend)
+    if b == "ref":
+        return ref.ssm_scan(a, x)
+    return ssm_scan_pallas(a, x, interpret=(b == "interpret"), **blocks)

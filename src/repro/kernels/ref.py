@@ -1,0 +1,142 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the numerics; kernels must match them (bit-exactly for integer
+paths, allclose for float paths). They are also the dispatch target on
+platforms without a TPU backend (CPU dry-runs / model smoke tests).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# -- int8 GEMM (+ optional per-channel requant epilogue) ----------------------
+
+def gemm_int8(x: jax.Array, w: jax.Array,
+              requant_mult: jax.Array | None = None) -> jax.Array:
+    """x (M,K) int8 @ w (K,N) int8 -> int32, optionally requantized to int8.
+
+    The requant math matches repro.core.quantize.requantize exactly.
+    """
+    acc = jax.lax.dot_general(x, w, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    if requant_mult is None:
+        return acc
+    y = jnp.round(acc.astype(jnp.float32) * requant_mult[None, :])
+    return jnp.clip(y, -128, 127).astype(jnp.int8)
+
+
+# -- conv2d as implicit-im2col GEMM -------------------------------------------
+
+def conv2d_int8(x: jax.Array, w: jax.Array, stride: int = 1,
+                padding: int = 0,
+                requant_mult: jax.Array | None = None) -> jax.Array:
+    """NHWC single-image conv: x (H,W,C) int8, w (kh*kw*C, N) int8.
+
+    Evaluated as im2col+GEMM with int32 accumulation — identical semantics to
+    repro.core.executor.im2col path and the Pallas kernel.
+    """
+    H, W, C = x.shape
+    KKC, N = w.shape
+    # infer square kernel size
+    k = 1
+    while k * k * C < KKC:
+        k += 1
+    assert k * k * C == KKC, "weights not (kh*kw*C, N)"
+    xp = jnp.pad(x, ((padding, padding), (padding, padding), (0, 0)))
+    oh = (H + 2 * padding - k) // stride + 1
+    ow = (W + 2 * padding - k) // stride + 1
+    acc = jnp.zeros((oh * ow, N), jnp.int32)
+    wr = w.reshape(k, k, C, N)
+    for di in range(k):
+        for dj in range(k):
+            patch = jax.lax.slice(
+                xp, (di, dj, 0),
+                (di + (oh - 1) * stride + 1, dj + (ow - 1) * stride + 1, C),
+                (stride, stride, 1)).reshape(oh * ow, C)
+            acc = acc + jax.lax.dot_general(
+                patch, wr[di, dj], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+    if requant_mult is not None:
+        y = jnp.round(acc.astype(jnp.float32) * requant_mult[None, :])
+        acc = jnp.clip(y, -128, 127).astype(jnp.int8)
+    return acc.reshape(oh, ow, -1)
+
+
+# -- attention ----------------------------------------------------------------
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True,
+                    window: int | None = None,
+                    scale: float | None = None) -> jax.Array:
+    """Full-softmax GQA attention oracle.
+
+    q: (B, Hq, Sq, D), k/v: (B, Hkv, Skv, D); Hq % Hkv == 0.
+    `window` = sliding-window size (Mistral-style), None = full.
+    Query position i attends to kv position j iff
+        j <= i + (Skv - Sq)        (causal, supports decode offset)
+        j >  i + (Skv - Sq) - window   (if window)
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    g = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qg = qf.reshape(B, Hkv, g, Sq, D)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf)
+    offs = Skv - Sq
+    qi = jnp.arange(Sq)[:, None]
+    kj = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kj <= qi + offs
+    if window is not None:
+        mask &= kj > qi + offs - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return out.reshape(B, Hq, Sq, D).astype(q.dtype)
+
+
+# -- first-order gated scan (Mamba2 / linear-recurrence family) ----------------
+
+def ssm_scan(a: jax.Array, x: jax.Array,
+             h0: jax.Array | None = None) -> jax.Array:
+    """Diagonal gated linear recurrence: h_t = a_t * h_{t-1} + x_t.
+
+    a, x: (B, T, D); returns y with y[:, t] = h_t.
+    Associative-scan formulation (Blelloch), numerically identical to the
+    sequential recurrence in f32.
+    """
+    a = a.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    if h0 is not None:
+        x = x.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, x1 = c1
+        a2, x2 = c2
+        return a1 * a2, a2 * x1 + x2
+
+    _, y = jax.lax.associative_scan(combine, (a, x), axis=1)
+    return y
+
+
+def ssm_scan_sequential(a: jax.Array, x: jax.Array,
+                        h0: jax.Array | None = None) -> jax.Array:
+    """Step-by-step reference for the reference (slow, exact)."""
+    a = a.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    B, T, D = x.shape
+    h = jnp.zeros((B, D), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        at, xt = inp
+        h = at * h + xt
+        return h, h
+
+    _, ys = jax.lax.scan(step, h, (a.transpose(1, 0, 2), x.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2)

@@ -1,0 +1,181 @@
+"""Roofline-term extraction from compiled XLA artifacts (DESIGN.md §6).
+
+Sources:
+  * compiled.cost_analysis()  -> per-device HLO FLOPs and bytes accessed
+  * HLO text                  -> per-device collective bytes (result-tensor
+                                 sizes of all-gather / all-reduce /
+                                 reduce-scatter / all-to-all /
+                                 collective-permute ops)
+
+Terms (seconds, per device = per step wall-clock lower bounds):
+  compute    = HLO_FLOPs / peak_FLOP/s          (197 TFLOP/s bf16 v5e)
+  memory     = HLO_bytes / HBM_bw               (819 GB/s)
+  collective = collective_bytes / link_bw       (~50 GB/s/link ICI)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# "bf16[256,4096,128]" (layout/annotations optional)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _tensor_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result-tensor bytes per collective kind from HLO text.
+
+    Matches `<result types> <kind>(` including tuple results and layout
+    annotations; `-start` variants counted once (`-done` carries no shape
+    work). Result-tensor size is the standard proxy for data moved.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        if " = " not in line:
+            continue
+        _, rhs = line.split(" = ", 1)
+        for kind in _COLLECTIVES:
+            idx = rhs.find(f" {kind}(")
+            if idx < 0:
+                idx = rhs.find(f" {kind}-start(")
+            if idx < 0:
+                continue
+            out[kind] += _tensor_bytes(rhs[:idx])
+            out["count"] += 1
+            break
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    device_flops: float
+    device_bytes: float
+    device_collective_bytes: float
+    collective_breakdown: dict
+    model_flops: float                 # analytic 6ND (or decode 2ND) global
+    chips: int
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    link_bw: float = LINK_BW
+    raw_xla_flops: float = 0.0         # cost_analysis() (loop bodies x1)
+    raw_xla_bytes: float = 0.0
+    device_bytes_raw: float = 0.0      # incl. CPU-backend movement artifacts
+
+    @property
+    def t_compute(self) -> float:
+        return self.device_flops / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.device_bytes / self.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.device_collective_bytes / self.link_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs x chips): remat/redundancy waste."""
+        hw = self.device_flops * self.chips
+        return self.model_flops / hw if hw else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilization at the roofline bound."""
+        denom = self.bound_s * self.chips * self.peak_flops
+        return self.model_flops / denom if denom else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "hlo_flops_per_dev": self.device_flops,
+            "hlo_bytes_per_dev": self.device_bytes,
+            "coll_bytes_per_dev": self.device_collective_bytes,
+            "useful_ratio": self.useful_flops_ratio,
+            "roofline_mfu": self.mfu,
+            "raw_xla_flops": self.raw_xla_flops,
+            "raw_xla_bytes": self.raw_xla_bytes,
+            "hlo_bytes_per_dev_raw": self.device_bytes_raw,
+        }
+
+
+def analyze_compiled(arch: str, shape: str, mesh_name: str, compiled,
+                     model_flops: float, chips: int) -> Roofline:
+    """Trip-count-aware analysis (see hlo_count.py): XLA's cost_analysis
+    counts while bodies once, so scan-over-layers programs would be
+    undercounted by O(L x microbatches); we re-walk the HLO instead and
+    keep the raw numbers for reference."""
+    from .hlo_count import analyze_hlo_text
+    cost = compiled.cost_analysis()
+    raw_flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    try:
+        text = compiled.as_text()
+    except Exception:
+        text = ""
+    counted = analyze_hlo_text(text)
+    coll = {k: v for k, v in counted.coll.items()}
+    coll["count"] = counted.coll_count
+    return Roofline(arch=arch, shape=shape, mesh=mesh_name,
+                    device_flops=max(counted.flops, raw_flops),
+                    device_bytes=counted.adjusted_bytes,
+                    device_collective_bytes=float(counted.collective_bytes),
+                    collective_breakdown=coll, model_flops=model_flops,
+                    chips=chips, raw_xla_flops=raw_flops,
+                    raw_xla_bytes=raw_bytes,
+                    device_bytes_raw=counted.bytes)
+
+
+def model_flops_for(cfg, cell, n_active: int) -> float:
+    """Analytic MODEL_FLOPS for a cell: train 6ND, prefill 2ND,
+    decode 2N per token x batch."""
+    if cell.kind == "train":
+        tokens = cell.seq_len * cell.global_batch
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.seq_len * cell.global_batch
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * cell.global_batch   # decode: one token/request

@@ -1,0 +1,223 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) cell on the
+production meshes and record memory/cost/collective analyses.
+
+MUST be run as a module entrypoint (python -m repro.launch.dryrun ...) so the
+XLA_FLAGS line above executes before jax initializes its backends.
+
+For every cell this lowers the REAL step function (train_step with AdamW
+update / prefill_step / decode_step) with ShapeDtypeStruct inputs — no
+allocation anywhere — and compiles it for:
+  * single-pod  (16, 16)   = ("data", "model")   256 chips
+  * multi-pod   (2, 16, 16) = ("pod", "data", "model")  512 chips
+
+Outputs one JSON record per cell to --out (default
+experiments/dryrun.jsonl) with bytes-per-device, FLOPs, and the collective
+schedule summary that §Roofline consumes.
+"""
+
+import argparse
+import functools
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from ..configs import (ARCH_IDS, SHAPES, cell_applicable, enc_len_for,
+                       get_config, input_specs)
+from ..distribution.sharding import (batch_shardings, cache_shardings,
+                                     param_shardings, replicated,
+                                     zero1_shardings)
+from ..models import decode_step, init_params, prefill_step
+from ..models.config import ModelConfig
+from ..train.optimizer import OptConfig, init_opt_state
+from ..train.step import make_train_step
+from .analysis import analyze_compiled, model_flops_for
+from ..distribution.context import with_mesh_context
+from .mesh import make_production_mesh
+
+
+def _param_specs(cfg: ModelConfig):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(functools.partial(init_params, cfg), key)
+
+
+def microbatches_for(cfg: ModelConfig, cell, n_dp: int,
+                     global_batch: int | None = None) -> int:
+    """Microbatch count: <= ~8k tokens per data shard per microbatch,
+    subject to (global_batch/mb) % n_dp == 0."""
+    gb = global_batch or cell.global_batch
+    per_shard = max(1, gb // n_dp)
+    target = max(1, (per_shard * cell.seq_len) // 8192)
+    while target > 1 and (per_shard % target != 0):
+        target -= 1
+    return max(1, target)
+
+
+def lower_cell(cfg: ModelConfig, shape: str, mesh, *, zero1: bool = True,
+               scale_batch: float = 1.0, compile_: bool = True):
+    """Lower (and optionally compile) one cell on one mesh."""
+    cell = SHAPES[shape]
+    n_dp = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    chips = 1
+    for v in mesh.shape.values():
+        chips *= v
+    # FSDP is a training feature: serving steps read every weight each
+    # token, so per-step gathers would dominate; disable it for serve
+    # cells whenever model-sharded weights fit HBM (§Perf cell B notes)
+    if cell.kind != "train" and cfg.fsdp:
+        fits = cfg.param_count() * 2 / mesh.shape["model"] < 15e9
+        if fits:
+            import dataclasses as _dc
+            cfg = _dc.replace(cfg, fsdp=False)
+    specs = input_specs(cfg, shape, scale_batch=scale_batch)
+    p_specs = _param_specs(cfg)
+    p_shard = param_shardings(cfg, mesh, p_specs)
+
+    with with_mesh_context(mesh):
+        if cell.kind == "train":
+            opt_specs = jax.eval_shape(init_opt_state, p_specs)
+            shard_fn = zero1_shardings if zero1 else param_shardings
+            o_shard = {"mu": shard_fn(cfg, mesh, p_specs),
+                       "nu": shard_fn(cfg, mesh, p_specs),
+                       "step": jax.sharding.NamedSharding(
+                           mesh, jax.sharding.PartitionSpec())}
+            b_shard = batch_shardings(cfg, mesh, specs["batch"])
+            gb = specs["batch"]["tokens"].shape[0]
+            mb = microbatches_for(cfg, cell, n_dp, global_batch=gb)
+            step = make_train_step(
+                cfg, OptConfig(), microbatches=mb,
+                grad_shardings=shard_fn(cfg, mesh, p_specs))
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(p_specs, opt_specs, specs["batch"])
+        elif cell.kind == "prefill":
+            c_shard = cache_shardings(cfg, mesh, specs["cache"])
+            b_shard = batch_shardings(cfg, mesh, specs["batch"])
+            fn = prefill_step(cfg)
+            jitted = jax.jit(fn, in_shardings=(p_shard, b_shard, c_shard),
+                             out_shardings=(None, c_shard),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(p_specs, specs["batch"], specs["cache"])
+        else:
+            c_shard = cache_shardings(cfg, mesh, specs["cache"])
+            t_shard = batch_shardings(cfg, mesh, {"t": specs["tokens"]})["t"]
+            fn = decode_step(cfg)
+            jitted = jax.jit(fn, in_shardings=(p_shard, c_shard, t_shard),
+                             out_shardings=(None, c_shard),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(p_specs, specs["cache"], specs["tokens"])
+
+        compiled = lowered.compile() if compile_ else None
+    return lowered, compiled, chips
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool,
+             zero1: bool = True, reduced: bool = False,
+             scale_batch: float = 1.0,
+             overrides: dict | None = None) -> dict:
+    import dataclasses as _dc
+    cfg = get_config(arch, reduced=reduced)
+    if overrides:
+        cfg = _dc.replace(cfg, **overrides)
+    cell = SHAPES[shape]
+    ok, reason = cell_applicable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+           "zero1": zero1, "status": "skipped", "reason": reason,
+           "overrides": overrides or {}}
+    if not ok:
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        lowered, compiled, chips = lower_cell(
+            cfg, shape, mesh, zero1=zero1, scale_batch=scale_batch)
+        mem = compiled.memory_analysis()
+        roof = analyze_compiled(
+            arch, shape, mesh_name, compiled,
+            model_flops_for(cfg, cell, cfg.active_param_count()), chips)
+        rec.update({
+            "status": "ok",
+            "compile_s": round(time.time() - t0, 1),
+            "memory": {
+                "argument_bytes_per_dev": mem.argument_size_in_bytes,
+                "output_bytes_per_dev": mem.output_size_in_bytes,
+                "temp_bytes_per_dev": mem.temp_size_in_bytes,
+                "code_bytes": mem.generated_code_size_in_bytes,
+                "alias_bytes_per_dev": mem.alias_size_in_bytes,
+            },
+            "roofline": roof.row(),
+            "collectives": roof.collective_breakdown,
+        })
+    except Exception as e:  # noqa: BLE001 — record failures, keep sweeping
+        rec.update({"status": "error",
+                    "reason": f"{type(e).__name__}: {e}",
+                    "trace": traceback.format_exc()[-2000:]})
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help=f"one of {ARCH_IDS} or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help=f"one of {list(SHAPES)} or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--no-zero1", action="store_true")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--scale-batch", type=float, default=1.0)
+    ap.add_argument("--out", default="experiments/dryrun.jsonl")
+    ap.add_argument("--override", action="append", default=[],
+                    help="ModelConfig field override, e.g. "
+                         "moe_dispatch=sorted or remat=dots")
+    args = ap.parse_args(argv)
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        if v in ("True", "False"):
+            v = v == "True"
+        elif v.isdigit():
+            v = int(v)
+        elif v == "None":
+            v = None
+        overrides[k] = v
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    n_fail = 0
+    with open(args.out, "a") as f:
+        for arch in archs:
+            for shape in shapes:
+                for mp in meshes:
+                    rec = run_cell(arch, shape, multi_pod=mp,
+                                   zero1=not args.no_zero1,
+                                   reduced=args.reduced,
+                                   scale_batch=args.scale_batch,
+                                   overrides=overrides)
+                    line = {k: v for k, v in rec.items() if k != "trace"}
+                    print(json.dumps(line), flush=True)
+                    if rec["status"] == "error":
+                        n_fail += 1
+                        print(rec.get("trace", ""), file=sys.stderr)
+                    f.write(json.dumps(rec) + "\n")
+    if n_fail:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,432 @@
+"""Trip-count-aware HLO cost analyzer.
+
+`compiled.cost_analysis()` counts each `while` body ONCE, but every model
+here is scan-over-layers (+ microbatch scan + loss-chunk scan), so FLOPs,
+HBM bytes and collective bytes inside loops would be undercounted by
+O(num_layers x microbatches). This module walks the optimized HLO text,
+builds the computation call graph, extracts static trip counts from while
+conditions, and accumulates costs with multiplication at while nodes.
+
+Counting conventions:
+  * dot: 2*B*M*K*N from operand shapes + contracting/batch dims;
+  * elementwise / reduce / misc: 1 op per result element (second-order);
+  * bytes: operands + results of *top-level* ops per computation (post-
+    fusion HLO: a fusion node is one read-operands/write-result unit);
+    insides of fusions count FLOPs but not bytes;
+  * collectives: result-tensor bytes per kind, multiplied by loop trips;
+  * conditional: max over branches.
+
+Validated in tests/test_hlo_count.py against hand-computed scan programs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_dims(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    return sum(_DTYPE_BYTES[dt] * math.prod(dims or [1])
+               for dt, dims in _shape_dims(type_str))
+
+
+def _type_elems(type_str: str) -> int:
+    return sum(math.prod(dims or [1]) for _, dims in _shape_dims(type_str))
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    args: list[str]
+    attrs: str
+    args_raw: str = ""
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: dict[str, str]
+    ops: list[Op]
+    symbols: dict[str, str]          # %name -> type string
+    root: str | None = None          # marked ROOT op name
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    movement_bytes: float = 0.0     # pure dtype-convert/copy traffic: CPU-
+    coll: dict | None = None        # backend artifacts (bf16 dots upcast to
+    coll_count: float = 0.0         # f32, loop copy-insertion) that a TPU
+                                    # lowering does natively / elides.
+
+    def __post_init__(self):
+        if self.coll is None:
+            self.coll = {k: 0.0 for k in _COLLECTIVES}
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.movement_bytes += other.movement_bytes * mult
+        self.coll_count += other.coll_count * mult
+        for k in _COLLECTIVES:
+            self.coll[k] += other.coll[k] * mult
+
+    @property
+    def adjusted_bytes(self) -> float:
+        """TPU-native estimate: full program bytes minus pure-movement."""
+        return max(0.0, self.bytes - self.movement_bytes)
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+def _balanced(s: str, start: int) -> int:
+    """Index just past the matching ')' for the '(' at s[start]."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(s)
+
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->\s*(.+?)\s*\{")
+_OP_LINE = re.compile(r"^\s*(ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+
+
+def parse_hlo(text: str) -> tuple[dict[str, Computation], str]:
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                is_entry, name, params_s, _ = m.groups()
+                params = {}
+                for p in re.findall(r"%?([\w\.\-]+)\s*:\s*([^,()]+(?:\([^)]*\))?[^,]*)",
+                                    params_s):
+                    params[p[0]] = p[1]
+                cur = Computation(name, params, [], dict(
+                    ("%" + k, v) for k, v in params.items()))
+                if is_entry:
+                    entry = name
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        is_root, name, rhs = m.groups()
+        if is_root:
+            cur.root = "%" + name
+        # rhs = "<type> <opcode>(<args>)<attrs>"
+        rhs = rhs.strip()
+        if rhs.startswith("("):
+            t_end = _balanced(rhs, 0)
+        else:
+            # type ends before " <opcode>(" — find first space followed by
+            # word( — scan tokens
+            sp = rhs.find(" ")
+            t_end = sp if sp > 0 else len(rhs)
+        type_str = rhs[:t_end]
+        rest = rhs[t_end:].strip()
+        pm = re.match(r"([\w\-]+)\(", rest)
+        if not pm:
+            continue
+        opcode = pm.group(1)
+        a_start = pm.end() - 1
+        a_end = _balanced(rest, a_start)
+        args_s = rest[a_start + 1:a_end - 1]
+        attrs = rest[a_end:]
+        args = re.findall(r"%([\w\.\-]+)", args_s)
+        cur.ops.append(Op("%" + name, type_str, opcode,
+                          ["%" + a for a in args], attrs, args_s))
+        cur.symbols["%" + name] = type_str
+    return comps, entry
+
+
+_TRIP_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _while_trips(comps: dict, cond_name: str) -> int:
+    """Static trip count from the canonical `i < N` condition."""
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    consts = []
+    for op in cond.ops:
+        if op.opcode == "constant" and re.fullmatch(r"\d+",
+                                                    op.args_raw.strip()):
+            consts.append(int(op.args_raw.strip()))
+        # constant(N) may also appear inline in operand lists / attrs
+        consts += [int(x) for x in
+                   _TRIP_RE.findall(op.args_raw + " " + op.attrs)]
+    return max(consts) if consts else 1
+
+
+def _attr_ref(attrs: str, key: str) -> str | None:
+    m = re.search(key + r"=%?([\w\.\-]+)", attrs)
+    return m.group(1) if m else None
+
+
+def _attr_refs(attrs: str, key: str) -> list[str]:
+    m = re.search(key + r"=\{([^}]*)\}", attrs)
+    if not m:
+        return []
+    return [x.strip().lstrip("%") for x in m.group(1).split(",") if x.strip()]
+
+
+def _dims_of(comp: Computation, arg: str) -> list[int]:
+    t = comp.symbols.get(arg)
+    if t is None:
+        return []
+    sd = _shape_dims(t)
+    return sd[0][1] if sd else []
+
+
+def _int_list_attr(attrs: str, key: str) -> list[int]:
+    m = re.search(key + r"=\{([^}]*)\}", attrs)
+    if not m or not m.group(1).strip():
+        return []
+    return [int(x) for x in m.group(1).split(",")]
+
+
+def _dot_flops(comp: Computation, op: Op) -> float:
+    lhs = _dims_of(comp, op.args[0])
+    rhs = _dims_of(comp, op.args[1])
+    lb = _int_list_attr(op.attrs, "lhs_batch_dims")
+    lc = _int_list_attr(op.attrs, "lhs_contracting_dims")
+    if not lhs or not rhs:
+        return 0.0
+    B = math.prod(lhs[i] for i in lb) if lb else 1
+    K = math.prod(lhs[i] for i in lc) if lc else 1
+    M = math.prod(d for i, d in enumerate(lhs) if i not in lb + lc)
+    rhs_total = math.prod(rhs) if rhs else 1
+    N = rhs_total // max(1, B * K)
+    return 2.0 * B * M * K * N
+
+
+_NO_BYTES = ("parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "while", "conditional", "fusion",
+             "call")
+
+
+def _op_flops_coll(comps: dict, comp: Computation, op: Op,
+                   memo: dict) -> Cost:
+    """FLOPs + collectives + control-flow recursion (bytes added by caller
+    according to top-level vs fusion mode)."""
+    c = Cost()
+    oc = op.opcode
+    if oc == "dot":
+        c.flops += _dot_flops(comp, op)
+    elif oc == "while":
+        body = _attr_ref(op.attrs, "body")
+        cond = _attr_ref(op.attrs, "condition")
+        trips = _while_trips(comps, cond) if cond else 1
+        if body in comps:
+            c.add(_comp_cost(comps, body, memo), trips)
+        if cond in comps:
+            c.add(_comp_cost(comps, cond, memo), trips)
+    elif oc == "conditional":
+        branches = _attr_refs(op.attrs, "branch_computations")
+        if not branches:
+            branches = [b for b in (_attr_ref(op.attrs, "true_computation"),
+                                    _attr_ref(op.attrs, "false_computation"))
+                        if b]
+        sub = [_comp_cost(comps, b, memo) for b in branches if b in comps]
+        if sub:
+            c.add(max(sub, key=lambda s: s.flops + s.bytes))
+    elif oc == "fusion":
+        callee = _attr_ref(op.attrs, "calls")
+        if callee in comps:
+            c.add(_comp_cost(comps, callee, memo, mode="fusion"))
+    elif oc == "call":
+        callee = _attr_ref(op.attrs, "to_apply")
+        if callee in comps:
+            c.add(_comp_cost(comps, callee, memo))
+    else:
+        base = oc.removesuffix("-start")
+        if base in _COLLECTIVES and not oc.endswith("-done"):
+            c.coll[base] += _type_bytes(op.type_str)
+            c.coll_count += 1
+        elif oc == "sort":
+            elems = _type_elems(op.type_str)
+            c.flops += elems * max(1.0, math.log2(max(elems, 2)))
+        elif oc in ("map", "reduce", "reduce-window", "scatter",
+                    "select-and-scatter"):
+            c.flops += _type_elems(op.type_str)
+        elif oc in ("parameter", "constant", "tuple", "get-tuple-element",
+                    "bitcast", "copy", "reshape", "broadcast", "iota",
+                    "transpose", "slice", "dynamic-slice",
+                    "dynamic-update-slice", "concatenate", "pad", "gather",
+                    "convert", "reverse", "after-all", "partition-id",
+                    "rng-bit-generator", "custom-call", "optimization-barrier"):
+            pass                                 # data movement: bytes only
+        else:
+            c.flops += _type_elems(op.type_str)  # elementwise & misc
+    return c
+
+
+def _top_bytes(comp: Computation, op: Op) -> float:
+    """HBM traffic of one top-level (post-fusion) op. In-place / windowed
+    ops count only the touched region (a DUS into a stacked KV cache writes
+    one slice — XLA aliases the big buffer)."""
+    oc = op.opcode
+    if oc in _NO_BYTES:
+        return 0.0
+    res = _type_bytes(op.type_str)
+    if oc in ("dynamic-slice", "slice"):
+        return 2.0 * res
+    if oc == "dynamic-update-slice":
+        upd = _type_bytes(comp.symbols.get(op.args[1], "")) \
+            if len(op.args) > 1 else res
+        return 2.0 * upd
+    if oc == "gather":
+        idx = _type_bytes(comp.symbols.get(op.args[1], "")) \
+            if len(op.args) > 1 else 0
+        return 2.0 * res + idx
+    if oc == "scatter":
+        upd = _type_bytes(comp.symbols.get(op.args[-1], ""))
+        return 2.0 * upd
+    return res + sum(_type_bytes(comp.symbols.get(a, ""))
+                     for a in op.args[:8])
+
+
+def _fusion_param_reads(comp: Computation, op: Op,
+                        charged: set) -> float:
+    """Bytes read from fusion *parameters* by one inner op — the only real
+    HBM reads a fused kernel performs. Slice-type reads charge the touched
+    region (each use separately); any other use charges the full parameter
+    once."""
+    b = 0.0
+    params = comp.params
+    for i, a in enumerate(op.args):
+        pname = a[1:] if a.startswith("%") else a
+        if pname not in params:
+            continue
+        if op.opcode in ("dynamic-slice", "slice", "gather") and i == 0:
+            b += _type_bytes(op.type_str)
+        elif op.opcode == "dynamic-update-slice" and i == 0:
+            continue                       # aliased: write counted at root
+        elif a not in charged:
+            charged.add(a)
+            b += _type_bytes(params[pname])
+    return b
+
+
+def _fusion_root_write(comp: Computation) -> float:
+    if not comp.ops:
+        return 0.0
+    root = comp.ops[-1]
+    if comp.root is not None:
+        for o in comp.ops:
+            if o.name == comp.root:
+                root = o
+                break
+    sym = comp.symbols
+
+    def write_of(opname: str) -> float:
+        defs = {o.name: o for o in comp.ops}
+        o = defs.get(opname)
+        if o is not None and o.opcode == "dynamic-update-slice" \
+                and len(o.args) > 1:
+            return _type_bytes(sym.get(o.args[1], ""))
+        return _type_bytes(sym.get(opname, ""))
+
+    if root.opcode == "dynamic-update-slice" and len(root.args) > 1:
+        return _type_bytes(sym.get(root.args[1], ""))
+    if root.opcode == "tuple":
+        return sum(write_of(a) for a in root.args)
+    return _type_bytes(root.type_str)
+
+
+_MOVEMENT_OPS = frozenset((
+    "parameter", "constant", "convert", "copy", "bitcast", "broadcast",
+    "reshape", "select", "slice", "dynamic-slice", "dynamic-update-slice",
+    "tuple", "get-tuple-element", "iota", "pad", "transpose", "concatenate",
+    "compare"))
+
+
+def _is_pure_movement(comp: Computation) -> bool:
+    return all(op.opcode in _MOVEMENT_OPS for op in comp.ops)
+
+
+def _movement_touched(comp: Computation) -> float:
+    """TPU-equivalent traffic of a pure-movement fusion: only the regions a
+    native lowering would actually move (DUS updates, DS results)."""
+    touched = 0.0
+    for op in comp.ops:
+        if op.opcode == "dynamic-update-slice" and len(op.args) > 1:
+            touched += 2.0 * _type_bytes(comp.symbols.get(op.args[1], ""))
+        elif op.opcode in ("dynamic-slice", "slice"):
+            touched += 2.0 * _type_bytes(op.type_str)
+    return touched
+
+
+def _comp_cost(comps: dict, name: str, memo: dict,
+               mode: str = "top") -> Cost:
+    key = (name, mode)
+    if key in memo:
+        return memo[key]
+    memo[key] = Cost()                       # cycle guard
+    comp = comps[name]
+    total = Cost()
+    charged: set = set()
+    for op in comp.ops:
+        total.add(_op_flops_coll(comps, comp, op, memo))
+        if mode == "top":
+            b = _top_bytes(comp, op)
+            total.bytes += b
+            # full-buffer copies at top level: loop copy-insertion /
+            # donation artifacts — native lowering aliases them
+            if op.opcode == "copy":
+                total.movement_bytes += b
+        else:
+            total.bytes += _fusion_param_reads(comp, op, charged)
+    if mode == "fusion":
+        total.bytes += _fusion_root_write(comp)
+        if _is_pure_movement(comp):
+            total.movement_bytes += max(
+                0.0, total.bytes - _movement_touched(comp))
+    memo[key] = total
+    return total
+
+
+def analyze_hlo_text(text: str) -> Cost:
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        return Cost()
+    return _comp_cost(comps, entry, {})

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing never touches JAX
+device state. The dry-run entrypoint sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 BEFORE importing jax;
+smoke tests and benches see the real single CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0):
+    """Small mesh over however many (possibly forced-host) devices exist."""
+    if pod:
+        shape, axes = (pod, data, model), ("pod", "data", "model")
+    else:
+        shape, axes = (data, model), ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,75 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --reduced --steps 50 --batch 8 --seq 256 --ckpt /tmp/ckpt
+
+On a real multi-host pod this process runs per host (jax.distributed
+initialization hook below); in this container it drives the single-device
+CPU mesh end-to-end with the same code path the dry-run lowers.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+from ..configs import ARCH_IDS, get_config
+from ..train.loop import TrainConfig, train
+from ..train.optimizer import OptConfig
+from .mesh import make_host_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--schedule", default="cosine",
+                    choices=["cosine", "wsd", "const"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--data-axis", type=int, default=0,
+                    help="0 = all visible devices on data axis")
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--coordinator", default=None,
+                    help="host:port for jax.distributed on a real pod")
+    ap.add_argument("--out", default=None, help="write metrics json here")
+    args = ap.parse_args(argv)
+
+    if args.coordinator:
+        jax.distributed.initialize(coordinator_address=args.coordinator)
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    # minicpm's distinguishing schedule is WSD; honor it by default
+    if args.arch == "minicpm-2b" and args.schedule == "cosine":
+        args.schedule = "wsd"
+    n_dev = len(jax.devices())
+    data_ax = args.data_axis or max(1, n_dev // args.model_axis)
+    mesh = make_host_mesh(data=data_ax, model=args.model_axis)
+
+    opt = OptConfig(lr=args.lr, schedule=args.schedule,
+                    total_steps=args.steps,
+                    warmup_steps=max(1, args.steps // 20))
+    tc = TrainConfig(num_steps=args.steps, microbatches=args.microbatches,
+                     ckpt_dir=args.ckpt)
+    state, metrics = train(cfg, mesh, opt_cfg=opt, tc=tc,
+                           seq_len=args.seq, global_batch=args.batch)
+    first = metrics["losses"][0]
+    last = metrics["losses"][-1]
+    print(f"done: loss {first:.4f} -> {last:.4f} "
+          f"({metrics['history']})")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump({"arch": args.arch, "losses": metrics["losses"],
+                       "history": metrics["history"]}, f)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Pure-JAX model zoo covering the assigned architecture families."""
+
+from .config import ModelConfig
+from .transformer import init_params, train_loss, forward_hidden
+from .serve import prefill_step, decode_step, init_cache, cache_spec
+
+__all__ = ["ModelConfig", "init_params", "train_loss", "forward_hidden",
+           "prefill_step", "decode_step", "init_cache", "cache_spec"]

@@ -1,0 +1,210 @@
+"""Attention blocks: GQA projections (optional QKV bias), RoPE, sliding
+window, and three execution paths:
+
+  * `attend`             — training/prefill; dispatches to the direct oracle
+                           for short sequences and to a memory-safe blockwise
+                           (flash-style, lax.scan) implementation for long
+                           ones. On TPU, `repro.kernels.ops.flash_attention`
+                           takes over via backend dispatch.
+  * `decode_attend`      — one-token step against a fixed-size KV cache with
+                           position masking (static shapes for serving).
+
+All math in f32, outputs cast back to the activation dtype.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import normal_init
+from .rope import apply_rope
+from ..kernels import ops as kops
+
+_NEG = -1e30
+
+
+def attn_init(key, cfg: ModelConfig, dtype):
+    D, Hq, Hkv, Hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {"wq": normal_init(ks[0], (D, Hq * Hd), dtype),
+         "wk": normal_init(ks[1], (D, Hkv * Hd), dtype),
+         "wv": normal_init(ks[2], (D, Hkv * Hd), dtype),
+         "wo": normal_init(ks[3], (Hq * Hd, D), dtype)}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hq * Hd,), dtype)
+        p["bk"] = jnp.zeros((Hkv * Hd,), dtype)
+        p["bv"] = jnp.zeros((Hkv * Hd,), dtype)
+    return p
+
+
+def qkv_proj(p, x, cfg: ModelConfig, positions):
+    """x (B,S,D) -> q (B,Hq,S,hd), k/v (B,Hkv,S,hd), RoPE applied."""
+    B, S, _ = x.shape
+    Hq, Hkv, Hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, S, Hq, Hd).transpose(0, 2, 1, 3)
+    k = k.reshape(B, S, Hkv, Hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, Hkv, Hd).transpose(0, 2, 1, 3)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_blockwise(q, k, v, *, causal=True, window=None,
+                        q_chunk=1024, kv_chunk=1024):
+    """Flash-style attention in pure jnp (lax.scan over q and kv chunks).
+
+    Never materializes more than (q_chunk x kv_chunk) logits per (b, kv-head,
+    group); required for the 32k/500k shapes on the jnp path.
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    g = Hq // Hkv
+    scale = 1.0 / (D ** 0.5)
+    offs = Skv - Sq
+
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Skv)
+    nq = -(-Sq // qc)
+    nk = -(-Skv // kc)
+    Sqp, Skp = nq * qc, nk * kc
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, Sqp - Sq), (0, 0))) \
+        .astype(jnp.float32) * scale
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, Skp - Skv), (0, 0))) \
+        .astype(jnp.float32)
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, Skp - Skv), (0, 0))) \
+        .astype(jnp.float32)
+    qg = qp.reshape(B, Hkv, g, Sqp, D)
+
+    def q_step(_, qi):
+        qblk = jax.lax.dynamic_slice_in_dim(qg, qi * qc, qc, axis=3)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            kblk = jax.lax.dynamic_slice_in_dim(kp, kj * kc, kc, axis=2)
+            vblk = jax.lax.dynamic_slice_in_dim(vp, kj * kc, kc, axis=2)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qblk, kblk)
+            qpos = qi * qc + jnp.arange(qc)[:, None] + offs
+            kpos = kj * kc + jnp.arange(kc)[None, :]
+            mask = kpos < Skv
+            if causal:
+                mask &= kpos <= qpos
+            if window is not None:
+                mask &= kpos > qpos - window
+            s = jnp.where(mask[None, None, None], s, _NEG)
+            m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1, keepdims=True)
+            acc_new = acc * corr + jnp.einsum("bhgqk,bhkd->bhgqd", p, vblk)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, Hkv, g, qc, 1), _NEG, jnp.float32),
+                jnp.zeros((B, Hkv, g, qc, 1), jnp.float32),
+                jnp.zeros((B, Hkv, g, qc, D), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        return None, acc / jnp.maximum(l, 1e-30)
+
+    _, out = jax.lax.scan(q_step, None, jnp.arange(nq))
+    # out: (nq, B, Hkv, g, qc, D) -> (B, Hq, Sq, D)
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hkv, g, Sqp, D)
+    return out[:, :, :, :Sq].reshape(B, Hq, Sq, D).astype(q.dtype)
+
+
+def attend(q, k, v, *, causal=True, window=None,
+           blockwise_threshold=4096):
+    """Dispatch: Pallas on TPU, direct oracle for short seqs, blockwise else."""
+    Sq, Skv = q.shape[2], k.shape[2]
+    if jax.default_backend() == "tpu":
+        return kops.flash_attention(q, k, v, causal=causal, window=window)
+    if max(Sq, Skv) <= blockwise_threshold:
+        from ..kernels import ref
+        return ref.flash_attention(q, k, v, causal=causal, window=window)
+    return attention_blockwise(q, k, v, causal=causal, window=window)
+
+
+def quantize_kv(k):
+    """(B,H,S,hd) -> int8 cache + per-position scales (B,H,S).
+
+    Symmetric per-(position, head) scaling; used when
+    cfg.kv_cache_dtype == "int8"."""
+    scale = jnp.maximum(jnp.max(jnp.abs(k.astype(jnp.float32)), axis=-1),
+                        1e-6) / 127.0
+    q = jnp.clip(jnp.round(k.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def decode_attend_int8(q, k_q, k_s, v_q, v_s, pos, *, window=None):
+    """Decode attention over an int8 cache WITHOUT dequantizing it.
+
+    The per-position scales factor out of both contractions:
+        s_j  = k_scale_j * (q . k_q_j)       (scale the logits)
+        out  = sum_j (p_j * v_scale_j) v_q_j (scale the probs)
+    so the only big reads are the int8 tensors — half the bytes of a bf16
+    cache (§Perf smollm decode iteration)."""
+    B, Hq, _, D = q.shape
+    _, Hkv, Smax, _ = k_q.shape
+    g = Hq // Hkv
+    scale = 1.0 / (D ** 0.5)
+    qh = (q.reshape(B, Hkv, g, D) * scale).astype(jnp.bfloat16)
+    s = jax.lax.dot_general(
+        qh, k_q.astype(jnp.bfloat16), (((3,), (3,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.float32)
+    s = s * k_s[:, :, None, :]
+    kpos = jnp.arange(Smax)[None, None, None, :]
+    mask = kpos <= pos
+    if window is not None:
+        mask = mask & (kpos > pos - window)
+    s = jnp.where(mask, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    p = (p * v_s[:, :, None, :]).astype(jnp.bfloat16)
+    out = jax.lax.dot_general(
+        p, v_q.astype(jnp.bfloat16), (((3,), (2,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.float32)
+    return out.reshape(B, Hq, 1, D).astype(q.dtype)
+
+
+def decode_attend(q, cache_k, cache_v, pos, *, window=None):
+    """q (B,Hq,1,D) against cache (B,Hkv,Smax,D); positions > pos masked.
+
+    pos is the index of the *current* token (already written to the cache).
+    The cache is contracted in its storage dtype with f32 accumulation
+    (preferred_element_type) — casting the cache to f32 would materialize a
+    2x-sized copy of the whole cache every step (perf iteration #2).
+    """
+    B, Hq, _, D = q.shape
+    _, Hkv, Smax, _ = cache_k.shape
+    g = Hq // Hkv
+    scale = 1.0 / (D ** 0.5)
+    qh = (q.reshape(B, Hkv, g, D) * scale).astype(cache_k.dtype)
+    # s[b,h,g,k] = sum_d q[b,h,g,d] * K[b,h,k,d]   (f32 accumulation)
+    s = jax.lax.dot_general(
+        qh, cache_k, (((3,), (3,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.float32)
+    kpos = jnp.arange(Smax)[None, None, None, :]
+    mask = kpos <= pos
+    if window is not None:
+        mask = mask & (kpos > pos - window)
+    s = jnp.where(mask, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    # out[b,h,g,d] = sum_k p[b,h,g,k] * V[b,h,k,d]
+    out = jax.lax.dot_general(
+        p.astype(cache_v.dtype), cache_v, (((3,), (2,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.float32)
+    return out.reshape(B, Hq, 1, D).astype(q.dtype)
+
+
+def attn_out(p, o, cfg: ModelConfig):
+    """o (B,Hq,S,hd) -> (B,S,D)."""
+    B, Hq, S, Hd = o.shape
+    return o.transpose(0, 2, 1, 3).reshape(B, S, Hq * Hd) @ p["wo"]

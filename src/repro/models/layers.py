@@ -1,0 +1,82 @@
+"""Elementary layers: norms, MLPs, initializers. Pure functions over pytrees
+of arrays (no flax/haiku dependency — params are plain nested dicts so
+sharding rules can address leaves by path)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def normal_init(key, shape, dtype, scale: float = 0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# -- norms ---------------------------------------------------------------------
+
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def make_norm(kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm_init, rmsnorm
+    return layernorm_init, layernorm
+
+
+# -- MLPs ----------------------------------------------------------------------
+
+def mlp_init(key, d, f, act: str, dtype):
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {"wi": normal_init(ks[0], (d, f), dtype),
+                "wg": normal_init(ks[1], (d, f), dtype),
+                "wo": normal_init(ks[2], (f, d), dtype)}
+    return {"wi": normal_init(ks[0], (d, f), dtype),
+            "wo": normal_init(ks[2], (f, d), dtype)}
+
+
+def mlp_apply(p, x, act: str):
+    h = x @ p["wi"]
+    if act == "swiglu":
+        h = jax.nn.silu(h) * (x @ p["wg"])
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["wo"]
+
+
+# -- embedding / unembedding ----------------------------------------------------
+
+def embed_init(key, vocab, d, dtype):
+    return {"table": normal_init(key, (vocab, d), dtype)}
+
+
+def embed_apply(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed_logits(p_embed, p_head, x, tie: bool):
+    """x (..., D) -> logits (..., V)."""
+    if tie:
+        return x @ p_embed["table"].T
+    return x @ p_head["w"]

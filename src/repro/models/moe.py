@@ -1,0 +1,192 @@
+"""Mixture-of-Experts layer (Mixtral 8x top-2, Arctic 128e top-2 + dense
+residual), with two dispatch strategies:
+
+  * "onehot" — GShard-style dense dispatch/combine einsums over a
+    (tokens, experts, capacity) one-hot. Simple, collective-friendly,
+    but O(T*E*C) intermediates. The paper-faithful *baseline* (fixed
+    dataflow: every tensor shape is static).
+  * "sorted" — argsort-based ragged dispatch into an (E, C) slot grid
+    (scatter/gather). Same static shapes (capacity-bounded -> the paper's
+    fixed-dataflow requirement still holds), far smaller intermediates.
+    This is a §Perf hillclimb variant.
+
+Capacity bounding drops overflow tokens (standard practice); the router
+returns the combine weights so dropped tokens fall back to the residual path.
+Aux losses: Switch load-balance + router z-loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import normal_init
+
+
+def moe_init(key, cfg: ModelConfig, dtype):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    p = {"router": normal_init(ks[0], (D, E), jnp.float32, scale=0.01),
+         "wi": normal_init(ks[1], (E, D, F), dtype),
+         "wg": normal_init(ks[2], (E, D, F), dtype),
+         "wo": normal_init(ks[3], (E, F, D), dtype)}
+    return p
+
+
+def _capacity(T: int, cfg: ModelConfig) -> int:
+    c = int(T * cfg.top_k / cfg.num_experts * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)
+
+
+def _router(p, x, cfg: ModelConfig):
+    """x (T, D) -> gate probs (T, k), expert ids (T, k), aux losses."""
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, cfg.top_k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    # Switch load-balance loss
+    E = cfg.num_experts
+    me = probs.mean(axis=0)
+    onehot = jax.nn.one_hot(idx[:, 0], E)
+    fe = onehot.mean(axis=0)
+    aux = E * jnp.sum(me * fe)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return gate, idx, aux + 1e-3 * z
+
+
+def _expert_mlp(p, xe):
+    """xe (E, C, D) -> (E, C, D), vectorized over experts."""
+    h = jnp.einsum("ecd,edf->ecf", xe, p["wi"])
+    g = jnp.einsum("ecd,edf->ecf", xe, p["wg"])
+    h = jax.nn.silu(h) * g
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"])
+
+
+def moe_apply_onehot(p, x, cfg: ModelConfig):
+    T, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    C = _capacity(T, cfg)
+    gate, idx, aux = _router(p, x, cfg)
+
+    # slot assignment: position of each (token, k) within its expert
+    flat_e = idx.reshape(-1)                                  # (T*K,)
+    eo = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)           # (T*K, E)
+    pos = jnp.cumsum(eo, axis=0) * eo - 1                     # slot per row
+    slot = pos.max(axis=1)                                    # (T*K,)
+    keep = (slot < C) & (slot >= 0)
+    disp = (jax.nn.one_hot(flat_e, E, dtype=x.dtype)[:, :, None]
+            * jax.nn.one_hot(jnp.where(keep, slot, 0), C,
+                             dtype=x.dtype)[:, None, :]
+            * keep[:, None, None].astype(x.dtype))            # (T*K, E, C)
+    disp = disp.reshape(T, K, E, C)
+    comb = disp * gate[..., None, None].astype(x.dtype)       # (T, K, E, C)
+
+    xe = jnp.einsum("tkec,td->ecd", disp, x)
+    ye = _expert_mlp(p, xe)
+    y = jnp.einsum("tkec,ecd->td", comb, ye)
+    return y, aux
+
+
+def moe_apply_sorted(p, x, cfg: ModelConfig):
+    T, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    C = _capacity(T, cfg)
+    gate, idx, aux = _router(p, x, cfg)
+
+    flat_e = idx.reshape(-1)                                  # (T*K,)
+    order = jnp.argsort(flat_e)                               # stable
+    se = flat_e[order]
+    tok = order // K
+    # slot within expert = rank - segment start
+    seg_start = jnp.searchsorted(se, jnp.arange(E), side="left")
+    slot = jnp.arange(T * K) - seg_start[se]
+    keep = slot < C
+    slot_c = jnp.where(keep, slot, 0)
+
+    buf = jnp.zeros((E, C, D), x.dtype)
+    buf = buf.at[se, slot_c].add(
+        x[tok] * keep[:, None].astype(x.dtype), mode="drop")
+    ye = _expert_mlp(p, buf)
+    yt = ye[se, slot_c] * keep[:, None].astype(x.dtype)       # (T*K, D)
+    gflat = gate.reshape(-1)[order].astype(x.dtype)
+    y = jnp.zeros((T, D), x.dtype).at[tok].add(yt * gflat[:, None],
+                                               mode="drop")
+    return y, aux
+
+
+def _dp_constraint():
+    """Batch-dim sharding-constraint helper for the current mesh (None if
+    no DP mesh axes are active)."""
+    from ..distribution.context import current_mesh
+    from jax.sharding import PartitionSpec as P, NamedSharding
+    mesh = current_mesh()
+    dp = tuple(a for a in ("pod", "data")
+               if mesh is not None and a in (mesh.axis_names or ()))
+    if not dp:
+        return None
+
+    def constrain(t):
+        spec = P(dp, *([None] * (t.ndim - 1)))
+        return jax.lax.with_sharding_constraint(
+            t, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+def moe_apply_sorted_batched(p, x, cfg: ModelConfig, constrain=None):
+    """Batched sorted dispatch: every batch row routes its own S tokens.
+
+    All scatters/gathers carry an explicit iota over the batch dim, which
+    the SPMD partitioner recognizes as an index-parallel dim - combined
+    with sharding constraints pinning the batch dim of every dispatch
+    buffer to the DP axes, routing stays shard-local. (Plain vmap or
+    unbatched scatter makes GSPMD replicate the capacity buffers and
+    all-reduce them across data shards; see EXPERIMENTS.md SPerf.)
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    C = _capacity(S, cfg)
+    if constrain is None:
+        constrain = lambda t: t              # noqa: E731
+
+    x = constrain(x)
+    gate, idx, aux = jax.vmap(lambda r: _router(p, r, cfg))(x)
+    flat_e = idx.reshape(B, S * K)
+    order = jnp.argsort(flat_e, axis=1)
+    se = jnp.take_along_axis(flat_e, order, axis=1)          # (B, S*K)
+    tok = order // K
+    seg_start = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(E), side="left"))(se)
+    slot = jnp.arange(S * K)[None, :] - jnp.take_along_axis(
+        seg_start, se, axis=1)
+    keep = slot < C
+    slot_c = jnp.where(keep, slot, 0)
+
+    b_iota = jnp.broadcast_to(jnp.arange(B)[:, None], (B, S * K))
+    xt = jnp.take_along_axis(x, tok[..., None], axis=1)      # (B, S*K, D)
+    xt = xt * keep[..., None].astype(x.dtype)
+    buf = jnp.zeros((B, E, C, D), x.dtype)
+    buf = constrain(buf.at[b_iota, se, slot_c].add(xt, mode="drop"))
+
+    h = jnp.einsum("becd,edf->becf", buf, p["wi"])
+    g = jnp.einsum("becd,edf->becf", buf, p["wg"])
+    h = jax.nn.silu(h) * g
+    ye = constrain(jnp.einsum("becf,efd->becd", h, p["wo"]))
+
+    yt = ye[b_iota, se, slot_c] * keep[..., None].astype(x.dtype)
+    gflat = jnp.take_along_axis(gate.reshape(B, S * K), order,
+                                axis=1).astype(x.dtype)
+    y = jnp.zeros((B, S, D), x.dtype)
+    y = constrain(y.at[b_iota, tok].add(yt * gflat[..., None],
+                                        mode="drop"))
+    return y, jnp.mean(aux)
+
+
+def moe_apply(p, x, cfg: ModelConfig):
+    """x (B, S, D) -> (B, S, D), plus aux loss (see
+    moe_apply_sorted_batched for the dispatch-locality design)."""
+    if cfg.moe_dispatch == "sorted":
+        return moe_apply_sorted_batched(p, x, cfg, _dp_constraint())
+    y, aux = jax.vmap(lambda r: moe_apply_onehot(p, r, cfg))(x)
+    return y, jnp.mean(aux)

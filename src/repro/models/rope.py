@@ -1,0 +1,22 @@
+"""Rotary position embeddings (RoPE)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 1e4) -> jnp.ndarray:
+    """x: (..., S, D); positions: (S,) or broadcastable to x[..., :, 0]."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)                       # (D/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return y.astype(x.dtype)

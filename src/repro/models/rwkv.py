@@ -1,0 +1,146 @@
+"""RWKV-6 ("Finch") blocks: time-mix with data-dependent per-channel decay
+and matrix-valued state, plus squared-ReLU channel-mix. Attention-free;
+decode state is O(H * dk * dv) regardless of context length (the reason this
+arch runs the long_500k cell).
+
+The WKV recurrence per head:
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (S: (dk, dv))
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+Training uses a chunked-parallel form (cumulative decays inside a chunk,
+sequential scan across chunks) — the standard GLA-style chunking, safe in
+f32 for chunk <= 32 because every pairwise factor prod w in (0,1] is
+computed as a ratio of *bounded* terms (W_{i-1}/W_j for j<i and W_c/W_j are
+products over at most `chunk` decays).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import normal_init
+
+
+def rwkv_init(key, cfg: ModelConfig, dtype):
+    D = cfg.d_model
+    H = cfg.num_heads if cfg.num_heads > 0 else D // 64
+    dk = D // H
+    ks = jax.random.split(key, 10)
+    return {
+        # time-mix
+        "mix_r": jnp.full((D,), 0.5, dtype), "mix_k": jnp.full((D,), 0.5, dtype),
+        "mix_v": jnp.full((D,), 0.5, dtype), "mix_w": jnp.full((D,), 0.5, dtype),
+        "mix_g": jnp.full((D,), 0.5, dtype),
+        "wr": normal_init(ks[0], (D, D), dtype),
+        "wk": normal_init(ks[1], (D, D), dtype),
+        "wv": normal_init(ks[2], (D, D), dtype),
+        "wg": normal_init(ks[3], (D, D), dtype),
+        "wo": normal_init(ks[4], (D, D), dtype),
+        "w_proj": normal_init(ks[5], (D, D), dtype, 0.01),  # decay lora
+        "w_bias": jnp.full((D,), -1.0, jnp.float32),
+        "u": normal_init(ks[6], (H, dk), jnp.float32, 0.1),
+        "ln_scale": jnp.ones((D,), dtype),
+        # channel-mix
+        "cmix_k": jnp.full((D,), 0.5, dtype),
+        "cmix_r": jnp.full((D,), 0.5, dtype),
+        "ck": normal_init(ks[7], (D, cfg.d_ff), dtype),
+        "cv": normal_init(ks[8], (cfg.d_ff, D), dtype),
+        "cr": normal_init(ks[9], (D, D), dtype),
+    }
+
+
+def _token_shift(x, mix, last=None):
+    """lerp(x_{t-1}, x_t, mix); last (B,1,D) for decode continuity."""
+    if last is None:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = jnp.concatenate([last, x], axis=1)[:, :-1]
+    return prev + mix * (x - prev)
+
+
+def wkv_chunked(r, k, v, w, u, chunk: int = 32, state=None):
+    """r,k (B,H,T,dk), v (B,H,T,dv), w (B,H,T,dk) decays in (0,1).
+
+    Returns y (B,H,T,dv) and final state (B,H,dk,dv).
+    """
+    B, H, T, dk = r.shape
+    dv = v.shape[-1]
+    c = min(chunk, T)
+    Tp = -(-T // c) * c
+    pad = ((0, 0), (0, 0), (0, Tp - T), (0, 0))
+    rf = jnp.pad(r.astype(jnp.float32), pad)
+    kf = jnp.pad(k.astype(jnp.float32), pad)
+    vf = jnp.pad(v.astype(jnp.float32), pad)
+    wf = jnp.pad(w.astype(jnp.float32), pad, constant_values=1.0)
+    nc = Tp // c
+    rc = rf.reshape(B, H, nc, c, dk).transpose(2, 0, 1, 3, 4)
+    kc = kf.reshape(B, H, nc, c, dk).transpose(2, 0, 1, 3, 4)
+    vc = vf.reshape(B, H, nc, c, dv).transpose(2, 0, 1, 3, 4)
+    wc = wf.reshape(B, H, nc, c, dk).transpose(2, 0, 1, 3, 4)
+
+    S0 = (jnp.zeros((B, H, dk, dv), jnp.float32) if state is None
+          else state.astype(jnp.float32))
+    mask = jnp.tril(jnp.ones((c, c), jnp.float32), k=-1)   # strict lower
+
+    def step(S, inp):
+        rb, kb, vb, wb = inp                                # (B,H,c,·)
+        Wc = jnp.cumprod(wb, axis=2)                        # (B,H,c,dk)
+        W_prev = jnp.pad(Wc, ((0, 0), (0, 0), (1, 0), (0, 0)),
+                         constant_values=1.0)[:, :, :-1]
+        r_in = rb * W_prev                                  # decays since 0
+        k_out = kb / jnp.maximum(Wc, 1e-30)                 # bounded w/ r_in
+        y_inter = jnp.einsum("bhck,bhkv->bhcv", r_in, S)
+        A = jnp.einsum("bhik,bhjk->bhij", r_in, k_out) * mask
+        y_intra = jnp.einsum("bhij,bhjv->bhiv", A, vb)
+        bonus = jnp.einsum("bhck,bhck->bhc", rb, u[None, :, None, :] * kb)
+        y_diag = bonus[..., None] * vb
+        Wend = Wc[:, :, -1]                                 # (B,H,dk)
+        k_end = kb * (Wend[:, :, None, :] / jnp.maximum(Wc, 1e-30))
+        S_new = S * Wend[..., None] + jnp.einsum(
+            "bhck,bhcv->bhkv", k_end, vb)
+        return S_new, y_inter + y_intra + y_diag
+
+    S_fin, ys = jax.lax.scan(step, S0, (rc, kc, vc, wc))
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(B, H, Tp, dv)[:, :, :T]
+    return y, S_fin
+
+
+def rwkv_time_mix(p, x, cfg: ModelConfig, state=None, last=None):
+    """x (B,S,D) -> (y, (wkv_state, last_token))."""
+    B, S, D = x.shape
+    H = cfg.num_heads if cfg.num_heads > 0 else D // 64
+    dk = D // H
+    xr = _token_shift(x, p["mix_r"], last)
+    xk = _token_shift(x, p["mix_k"], last)
+    xv = _token_shift(x, p["mix_v"], last)
+    xw = _token_shift(x, p["mix_w"], last)
+    xg = _token_shift(x, p["mix_g"], last)
+    r = (xr @ p["wr"]).reshape(B, S, H, dk).transpose(0, 2, 1, 3)
+    k = (xk @ p["wk"]).reshape(B, S, H, dk).transpose(0, 2, 1, 3)
+    v = (xv @ p["wv"]).reshape(B, S, H, dk).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(xg @ p["wg"])
+    # data-dependent decay (Finch): w in (0,1), near 1
+    wdec = jnp.exp(-jnp.exp(
+        (xw.astype(jnp.float32) @ p["w_proj"].astype(jnp.float32))
+        + p["w_bias"]))
+    wdec = wdec.reshape(B, S, H, dk).transpose(0, 2, 1, 3)
+    y, S_fin = wkv_chunked(r, k, v, wdec, p["u"], state=state)
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, D)
+    # per-head group norm
+    yf = y.astype(jnp.float32).reshape(B, S, H, dk)
+    mu = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    yf = (yf - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = (yf.reshape(B, S, D) * p["ln_scale"].astype(jnp.float32)) \
+        .astype(x.dtype)
+    out = (y * g) @ p["wo"]
+    return out, (S_fin, x[:, -1:, :])
+
+
+def rwkv_channel_mix(p, x, cfg: ModelConfig, last=None):
+    xk = _token_shift(x, p["cmix_k"], last)
+    xr = _token_shift(x, p["cmix_r"], last)
+    k = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    return jax.nn.sigmoid(xr @ p["cr"]) * (k @ p["cv"]), x[:, -1:, :]

@@ -1,0 +1,428 @@
+"""Serving paths: prefill (fill KV/state caches, return last-token logits)
+and decode (one token against a fixed-size cache) for every family.
+
+Cache dataflow design (perf iteration #1, see EXPERIMENTS.md §Perf): caches
+are stacked on the layer dim and fed through the layer scan as **xs/ys
+slices**, never as scan carries. Carrying a stacked cache and
+dynamic-update-slicing it per layer makes the whole cache loop-carried
+state — XLA's copy-insertion then duplicates the full cache every
+iteration (measured 37.6 GB/device/step for smollm decode_32k vs 1.1 GB
+after this restructure). With xs/ys, each layer reads exactly its slice
+and writes exactly its slice; the loop-invariant remainder is untouched.
+
+The hybrid family scans over *groups* (period mamba layers + one shared
+attention application) so the shared-attn cache aligns with the group dim.
+
+Static shapes throughout: serve_step is a fixed-dataflow XLA program, the
+property the paper's static scheduling requires (repro.core computes WCET
+bounds for exactly this step).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import embed_apply, make_norm, mlp_apply
+from .attention import (attn_out, decode_attend, decode_attend_int8,
+                        attend, qkv_proj, quantize_kv)
+from .moe import moe_apply
+from .ssm import ssm_apply
+from .rwkv import rwkv_channel_mix, rwkv_time_mix
+from .transformer import (_dense_block, _embed_with_frontend, _maybe_remat,
+                          _unembed_weight, encode)
+
+
+def _hybrid_groups(cfg: ModelConfig) -> tuple[int, int, int]:
+    period = max(1, cfg.attn_every)
+    return period, cfg.num_layers // period, cfg.num_layers % period
+
+
+# -- cache construction ----------------------------------------------------------
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int = 0) -> dict:
+    """Shape/dtype tree of the decode cache (ShapeDtypeStruct factory)."""
+    dt = cfg.jnp_dtype
+    L, Hkv, hd, D = cfg.num_layers, cfg.num_kv_heads, cfg.hd, cfg.d_model
+
+    def sds(shape, dtype=dt):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    if cfg.family in ("dense", "moe"):
+        if cfg.kv_cache_dtype == "int8":
+            return {"k": sds((L, batch, Hkv, max_len, hd), jnp.int8),
+                    "v": sds((L, batch, Hkv, max_len, hd), jnp.int8),
+                    "k_scale": sds((L, batch, Hkv, max_len), jnp.float32),
+                    "v_scale": sds((L, batch, Hkv, max_len), jnp.float32),
+                    "pos": sds((), jnp.int32)}
+        return {"k": sds((L, batch, Hkv, max_len, hd)),
+                "v": sds((L, batch, Hkv, max_len, hd)),
+                "pos": sds((), jnp.int32)}
+    if cfg.family == "ssm":
+        H = cfg.num_heads if cfg.num_heads > 0 else D // 64
+        dk = D // H
+        return {"wkv": sds((L, batch, H, dk, dk), jnp.float32),
+                "last_tm": sds((L, batch, 1, D)),
+                "last_cm": sds((L, batch, 1, D)),
+                "pos": sds((), jnp.int32)}
+    if cfg.family == "hybrid":
+        Din, N = 2 * D, cfg.ssm_state
+        _, napp, _ = _hybrid_groups(cfg)
+        return {"ssm_state": sds((L, batch, Din, N), jnp.float32),
+                "conv": sds((L, batch, cfg.ssm_conv - 1, Din)),
+                "k": sds((max(1, napp), batch, Hkv, max_len, hd)),
+                "v": sds((max(1, napp), batch, Hkv, max_len, hd)),
+                "pos": sds((), jnp.int32)}
+    if cfg.family == "encdec":
+        Ld = cfg.dec_layers
+        return {"k": sds((Ld, batch, Hkv, max_len, hd)),
+                "v": sds((Ld, batch, Hkv, max_len, hd)),
+                "xk": sds((Ld, batch, Hkv, enc_len, hd)),
+                "xv": sds((Ld, batch, Hkv, enc_len, hd)),
+                "pos": sds((), jnp.int32)}
+    raise ValueError(cfg.family)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int = 0) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, max_len, enc_len))
+
+
+def _last_logits(cfg, params, h):
+    _, norm = make_norm(cfg.norm)
+    h = norm(params["final_norm"], h[:, -1:], cfg.norm_eps)
+    return (h @ _unembed_weight(cfg, params)).astype(jnp.float32)
+
+
+def _place(cache_slab, fresh, S):
+    """Write S prefilled positions into a (possibly longer) cache slab."""
+    if cache_slab.shape[3] == S:
+        return fresh.astype(cache_slab.dtype)
+    return jax.lax.dynamic_update_slice(
+        cache_slab, fresh.astype(cache_slab.dtype), (0, 0, 0, 0, 0))
+
+
+def _place4(cache_slab, fresh, S):
+    """Same for 4-D (L, B, H, S) scale slabs."""
+    if cache_slab.shape[3] == S:
+        return fresh.astype(cache_slab.dtype)
+    return jax.lax.dynamic_update_slice(
+        cache_slab, fresh.astype(cache_slab.dtype), (0, 0, 0, 0))
+
+
+# -- prefill ----------------------------------------------------------------------
+
+def prefill_step(cfg: ModelConfig):
+    """(params, batch, cache) -> (last_logits (B,1,V), filled cache)."""
+    _, norm = make_norm(cfg.norm)
+
+    def fn(params, batch, cache):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = jnp.arange(S)
+
+        if cfg.family in ("dense", "moe"):
+            x = _embed_with_frontend(cfg, params, batch)
+
+            def body(h, pl_):
+                z = norm(pl_["ln1"], h, cfg.norm_eps)
+                q, k, v = qkv_proj(pl_["attn"], z, cfg, positions)
+                o = attend(q, k, v, causal=True, window=cfg.sliding_window)
+                h = h + attn_out(pl_["attn"], o, cfg)
+                z = norm(pl_["ln2"], h, cfg.norm_eps)
+                if cfg.family == "dense":
+                    h = h + mlp_apply(pl_["mlp"], z, cfg.act)
+                else:
+                    y, _ = moe_apply(pl_["moe"], z, cfg)
+                    if cfg.dense_residual_ff:
+                        y = y + mlp_apply(pl_["dense_mlp"], z, cfg.act)
+                    h = h + y
+                if cfg.kv_cache_dtype == "int8":
+                    kq, ksc = quantize_kv(k)
+                    vq, vsc = quantize_kv(v)
+                    return h, (kq, ksc, vq, vsc)
+                return h, (k.astype(cfg.jnp_dtype), v.astype(cfg.jnp_dtype))
+
+            if cfg.kv_cache_dtype == "int8":
+                x, (kq, ksc, vq, vsc) = jax.lax.scan(
+                    _maybe_remat(body, cfg), x, params["layers"])
+                new_cache = {"k": _place(cache["k"], kq, S),
+                             "v": _place(cache["v"], vq, S),
+                             "k_scale": _place4(cache["k_scale"], ksc, S),
+                             "v_scale": _place4(cache["v_scale"], vsc, S),
+                             "pos": jnp.int32(S - 1)}
+            else:
+                x, (ks, vs) = jax.lax.scan(_maybe_remat(body, cfg), x,
+                                           params["layers"])
+                new_cache = {"k": _place(cache["k"], ks, S),
+                             "v": _place(cache["v"], vs, S),
+                             "pos": jnp.int32(S - 1)}
+            return _last_logits(cfg, params, x), new_cache
+
+        if cfg.family == "ssm":
+            x = embed_apply(params["embed"], tokens)
+
+            def body(h, pl_):
+                z = norm(pl_["ln1"], h, cfg.norm_eps)
+                y, (S_fin, last_tm) = rwkv_time_mix(pl_["mix"], z, cfg)
+                h = h + y
+                z = norm(pl_["ln2"], h, cfg.norm_eps)
+                y, last_cm = rwkv_channel_mix(pl_["mix"], z, cfg)
+                return h + y, (S_fin, last_tm.astype(cfg.jnp_dtype),
+                               last_cm.astype(cfg.jnp_dtype))
+
+            x, (wkv, ltm, lcm) = jax.lax.scan(_maybe_remat(body, cfg), x,
+                                              params["layers"])
+            new_cache = {"wkv": wkv, "last_tm": ltm, "last_cm": lcm,
+                         "pos": jnp.int32(S - 1)}
+            return _last_logits(cfg, params, x), new_cache
+
+        if cfg.family == "hybrid":
+            x = embed_apply(params["embed"], tokens)
+            shared = params["shared_attn"]
+            period, G, R = _hybrid_groups(cfg)
+            stacked = params["layers"]
+            grouped = jax.tree.map(
+                lambda a: a[:G * period].reshape(G, period, *a.shape[1:]),
+                stacked)
+            tail = jax.tree.map(lambda a: a[G * period:], stacked)
+
+            def ssm_once(h, pl_):
+                z = norm(pl_["ln1"], h, cfg.norm_eps)
+                y, (s_new, c_new) = ssm_apply(pl_["ssm"], z, cfg)
+                return h + y, (s_new, c_new.astype(cfg.jnp_dtype))
+
+            def group_body(h, gp):
+                h, (st, cc) = jax.lax.scan(
+                    _maybe_remat(ssm_once, cfg), h, gp)
+                z = norm(shared["ln1"], h, cfg.norm_eps)
+                q, k, v = qkv_proj(shared["attn"], z, cfg, positions)
+                o = attend(q, k, v, causal=True)
+                h = h + attn_out(shared["attn"], o, cfg)
+                z = norm(shared["ln2"], h, cfg.norm_eps)
+                h = h + mlp_apply(shared["mlp"], z, cfg.act)
+                return h, (st, cc, k.astype(cfg.jnp_dtype),
+                           v.astype(cfg.jnp_dtype))
+
+            x, (st_g, cc_g, ks, vs) = jax.lax.scan(group_body, x, grouped)
+            st = st_g.reshape(G * period, *st_g.shape[2:])
+            cc = cc_g.reshape(G * period, *cc_g.shape[2:])
+            if R:
+                x, (st_t, cc_t) = jax.lax.scan(
+                    _maybe_remat(ssm_once, cfg), x, tail)
+                st = jnp.concatenate([st, st_t], 0)
+                cc = jnp.concatenate([cc, cc_t], 0)
+            new_cache = {"ssm_state": st, "conv": cc,
+                         "k": _place(cache["k"], ks, S),
+                         "v": _place(cache["v"], vs, S),
+                         "pos": jnp.int32(S - 1)}
+            return _last_logits(cfg, params, x), new_cache
+
+        if cfg.family == "encdec":
+            src = batch["src_tokens"]
+            x_enc = embed_apply(params["embed"], src)
+            if cfg.frontend is not None and "frontend_embeds" in batch:
+                fe = batch["frontend_embeds"].astype(x_enc.dtype)
+                x_enc = jnp.concatenate([fe, x_enc[:, fe.shape[1]:]], axis=1)
+            enc_pos = jnp.arange(src.shape[1])
+            enc_out = encode(cfg, params, x_enc, enc_pos)
+            x = embed_apply(params["embed"], tokens)
+
+            def body(h, pl_):
+                z = norm(pl_["ln1"], h, cfg.norm_eps)
+                q, k, v = qkv_proj(pl_["attn"], z, cfg, positions)
+                o = attend(q, k, v, causal=True)
+                h = h + attn_out(pl_["attn"], o, cfg)
+                z = norm(pl_["lnx"], h, cfg.norm_eps)
+                qx, _, _ = qkv_proj(pl_["xattn"], z, cfg, positions)
+                _, kx, vx = qkv_proj(pl_["xattn"], enc_out, cfg, enc_pos)
+                ox = attend(qx, kx, vx, causal=False)
+                h = h + attn_out(pl_["xattn"], ox, cfg)
+                z = norm(pl_["ln2"], h, cfg.norm_eps)
+                h = h + mlp_apply(pl_["mlp"], z, cfg.act)
+                return h, (k.astype(cfg.jnp_dtype), v.astype(cfg.jnp_dtype),
+                           kx.astype(cfg.jnp_dtype),
+                           vx.astype(cfg.jnp_dtype))
+
+            x, (ks, vs, kxs, vxs) = jax.lax.scan(
+                _maybe_remat(body, cfg), x, params["dec_layers"])
+            new_cache = {"k": _place(cache["k"], ks, S),
+                         "v": _place(cache["v"], vs, S),
+                         "xk": kxs, "xv": vxs,
+                         "pos": jnp.int32(S - 1)}
+            return _last_logits(cfg, params, x), new_cache
+
+        raise ValueError(cfg.family)
+
+    return fn
+
+
+# -- decode -----------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig):
+    """(params, cache, tokens (B,1)) -> (logits (B,1,V), cache).
+
+    The new token's position is cache["pos"] + 1. Per-layer cache slices
+    flow through the scan as xs/ys (see module docstring).
+    """
+    _, norm = make_norm(cfg.norm)
+
+    def _attn_step(pl_, h, k_l, v_l, pos, window):
+        """One-token attention against this layer's cache slice."""
+        z = norm(pl_["ln1"], h, cfg.norm_eps)
+        q, k, v = qkv_proj(pl_["attn"], z, cfg,
+                           jnp.full((1,), pos, jnp.int32))
+        k_l = jax.lax.dynamic_update_slice(
+            k_l, k.astype(k_l.dtype), (0, 0, pos, 0))
+        v_l = jax.lax.dynamic_update_slice(
+            v_l, v.astype(v_l.dtype), (0, 0, pos, 0))
+        o = decode_attend(q, k_l, v_l, pos, window=window)
+        return h + attn_out(pl_["attn"], o, cfg), k_l, v_l
+
+    def _attn_step_int8(pl_, h, k_l, ks_l, v_l, vs_l, pos, window):
+        """one-token attention against an int8 cache slice (+scales)."""
+        z = norm(pl_["ln1"], h, cfg.norm_eps)
+        q, k, v = qkv_proj(pl_["attn"], z, cfg,
+                           jnp.full((1,), pos, jnp.int32))
+        kq, ksc = quantize_kv(k)
+        vq, vsc = quantize_kv(v)
+        k_l = jax.lax.dynamic_update_slice(k_l, kq, (0, 0, pos, 0))
+        v_l = jax.lax.dynamic_update_slice(v_l, vq, (0, 0, pos, 0))
+        ks_l = jax.lax.dynamic_update_slice(ks_l, ksc, (0, 0, pos))
+        vs_l = jax.lax.dynamic_update_slice(vs_l, vsc, (0, 0, pos))
+        o = decode_attend_int8(q, k_l, ks_l, v_l, vs_l, pos, window=window)
+        return h + attn_out(pl_["attn"], o, cfg), k_l, ks_l, v_l, vs_l
+
+    def fn(params, cache, tokens):
+        pos = cache["pos"] + 1
+        x = embed_apply(params["embed"], tokens)
+
+        if cfg.family in ("dense", "moe"):
+            int8kv = cfg.kv_cache_dtype == "int8"
+
+            def _ffn(pl_, h):
+                z = norm(pl_["ln2"], h, cfg.norm_eps)
+                if cfg.family == "dense":
+                    return h + mlp_apply(pl_["mlp"], z, cfg.act)
+                y, _ = moe_apply(pl_["moe"], z, cfg)
+                if cfg.dense_residual_ff:
+                    y = y + mlp_apply(pl_["dense_mlp"], z, cfg.act)
+                return h + y
+
+            if int8kv:
+                def body(h, sl):
+                    pl_, k_l, ks_l, v_l, vs_l = sl
+                    h, k_l, ks_l, v_l, vs_l = _attn_step_int8(
+                        pl_, h, k_l, ks_l, v_l, vs_l, pos,
+                        cfg.sliding_window)
+                    return _ffn(pl_, h), (k_l, ks_l, v_l, vs_l)
+
+                x, (ck, cks, cv, cvs) = jax.lax.scan(
+                    body, x, (params["layers"], cache["k"],
+                              cache["k_scale"], cache["v"],
+                              cache["v_scale"]))
+                return _last_logits(cfg, params, x), \
+                    {"k": ck, "k_scale": cks, "v": cv, "v_scale": cvs,
+                     "pos": pos}
+
+            def body(h, sl):
+                pl_, k_l, v_l = sl
+                h, k_l, v_l = _attn_step(pl_, h, k_l, v_l, pos,
+                                         cfg.sliding_window)
+                return _ffn(pl_, h), (k_l, v_l)
+
+            x, (ck, cv) = jax.lax.scan(
+                body, x, (params["layers"], cache["k"], cache["v"]))
+            return _last_logits(cfg, params, x), \
+                {"k": ck, "v": cv, "pos": pos}
+
+        if cfg.family == "ssm":
+            def body(h, sl):
+                pl_, st, lt, lc = sl
+                z = norm(pl_["ln1"], h, cfg.norm_eps)
+                y, (S_fin, last_tm) = rwkv_time_mix(
+                    pl_["mix"], z, cfg, state=st, last=lt.astype(z.dtype))
+                h = h + y
+                z = norm(pl_["ln2"], h, cfg.norm_eps)
+                y, last_cm = rwkv_channel_mix(pl_["mix"], z, cfg,
+                                              last=lc.astype(z.dtype))
+                return h + y, (S_fin, last_tm.astype(lt.dtype),
+                               last_cm.astype(lc.dtype))
+
+            x, (wkv, ltm, lcm) = jax.lax.scan(
+                body, x, (params["layers"], cache["wkv"],
+                          cache["last_tm"], cache["last_cm"]))
+            return _last_logits(cfg, params, x), \
+                {"wkv": wkv, "last_tm": ltm, "last_cm": lcm, "pos": pos}
+
+        if cfg.family == "hybrid":
+            shared = params["shared_attn"]
+            period, G, R = _hybrid_groups(cfg)
+            stacked = params["layers"]
+            grouped = jax.tree.map(
+                lambda a: a[:G * period].reshape(G, period, *a.shape[1:]),
+                stacked)
+            tail = jax.tree.map(lambda a: a[G * period:], stacked)
+
+            def ssm_once(h, sl):
+                pl_, st, cc = sl
+                z = norm(pl_["ln1"], h, cfg.norm_eps)
+                y, (s_new, c_new) = ssm_apply(
+                    pl_["ssm"], z, cfg, state=st,
+                    conv_cache=cc.astype(z.dtype))
+                return h + y, (s_new, c_new.astype(cc.dtype))
+
+            def group_body(h, sl):
+                gp, st_g, cc_g, k_l, v_l = sl
+                h, (st, cc) = jax.lax.scan(ssm_once, h, (gp, st_g, cc_g))
+                h, k_l, v_l = _attn_step(
+                    {"ln1": shared["ln1"], "attn": shared["attn"]},
+                    h, k_l, v_l, pos, None)
+                z = norm(shared["ln2"], h, cfg.norm_eps)
+                h = h + mlp_apply(shared["mlp"], z, cfg.act)
+                return h, (st, cc, k_l, v_l)
+
+            st_in = cache["ssm_state"]
+            cc_in = cache["conv"]
+            st_g = st_in[:G * period].reshape(G, period, *st_in.shape[1:])
+            cc_g = cc_in[:G * period].reshape(G, period, *cc_in.shape[1:])
+            x, (st_o, cc_o, ck, cv) = jax.lax.scan(
+                group_body, x, (grouped, st_g, cc_g, cache["k"],
+                                cache["v"]))
+            st = st_o.reshape(G * period, *st_o.shape[2:])
+            cc = cc_o.reshape(G * period, *cc_o.shape[2:])
+            if R:
+                x, (st_t, cc_t) = jax.lax.scan(
+                    ssm_once, x, (tail, st_in[G * period:],
+                                  cc_in[G * period:]))
+                st = jnp.concatenate([st, st_t], 0)
+                cc = jnp.concatenate([cc, cc_t], 0)
+            return _last_logits(cfg, params, x), \
+                {"ssm_state": st, "conv": cc, "k": ck, "v": cv, "pos": pos}
+
+        if cfg.family == "encdec":
+            def body(h, sl):
+                pl_, k_l, v_l, kx, vx = sl
+                h, k_l, v_l = _attn_step(pl_, h, k_l, v_l, pos, None)
+                z = norm(pl_["lnx"], h, cfg.norm_eps)
+                qx, _, _ = qkv_proj(pl_["xattn"], z, cfg,
+                                    jnp.full((1,), pos, jnp.int32))
+                ox = attend(qx, kx, vx, causal=False)
+                h = h + attn_out(pl_["xattn"], ox, cfg)
+                z = norm(pl_["ln2"], h, cfg.norm_eps)
+                h = h + mlp_apply(pl_["mlp"], z, cfg.act)
+                return h, (k_l, v_l)
+
+            x, (ck, cv) = jax.lax.scan(
+                body, x, (params["dec_layers"], cache["k"], cache["v"],
+                          cache["xk"], cache["xv"]))
+            return _last_logits(cfg, params, x), \
+                {"k": ck, "v": cv, "xk": cache["xk"], "xv": cache["xv"],
+                 "pos": pos}
+
+        raise ValueError(cfg.family)
+
+    return fn

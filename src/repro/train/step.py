@@ -1,0 +1,89 @@
+"""Train-step builder: microbatched gradient accumulation + AdamW update.
+
+The returned function has the fixed-dataflow shape the dry-run lowers:
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+
+Microbatching (gradient accumulation via lax.scan) bounds per-device
+activation memory on the big archs and is the hook where compute/transfer
+overlap happens on a real pod: each microbatch's backward collective
+(reduce-scatter under ZeRO-1) overlaps the next microbatch's forward in
+XLA's scheduler, the same overlap the paper gets from dual-ported
+scratchpads.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.transformer import train_loss
+from .optimizer import OptConfig, adamw_update
+
+
+def _split_micro(batch: dict, n: int) -> dict:
+    """(B, ...) -> (B/n, n, ...) on every leaf.
+
+    The microbatch dim is the MINOR axis of the split so the leading
+    (data-sharded) dim stays aligned: (256,)->(32, 8) keeps a 16-way
+    sharding on dim0 (32/16=2 rows/shard) with zero resharding. Splitting
+    as (8, 32) instead makes GSPMD reshard every microbatch onto 2 devices
+    (measured: 8x per-device attention FLOPs on smollm train_4k).
+    Microbatch m is then sliced from axis=1 inside the scan.
+    """
+    def r(x):
+        B = x.shape[0]
+        assert B % n == 0, f"batch {B} not divisible by {n} microbatches"
+        return x.reshape(B // n, n, *x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                    microbatches: int = 1, grad_shardings=None):
+    """grad_shardings: optional sharding tree for the f32 gradient
+    accumulator (pass the ZeRO-1 tree: an unsharded f32 shadow of a 110B
+    model is 27.8 GB/device — over v5e HBM on its own)."""
+    loss_fn = train_loss(cfg)
+
+    def _constrain_grads(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            grad_shardings)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            grads = _constrain_grads(grads)
+        else:
+            micro = _split_micro(batch, microbatches)
+
+            def acc_step(carry, m):
+                gsum, lsum = carry
+                mb = jax.tree.map(
+                    lambda x: jax.lax.dynamic_index_in_dim(
+                        x, m, axis=1, keepdims=False), micro)
+                (l, _), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                gsum = _constrain_grads(jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g))
+                return (gsum, lsum + l), None
+
+            zeros = _constrain_grads(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (gsum, lsum), _ = jax.lax.scan(acc_step, (zeros, 0.0),
+                                           jnp.arange(microbatches))
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = {}
+
+        params, opt_state, opt_metrics = adamw_update(
+            opt_cfg, grads, opt_state, params)
+        out = {"loss": loss, **opt_metrics}
+        return params, opt_state, out
+
+    return train_step

@@ -1,0 +1,145 @@
+"""Distribution layer: sharding-rule validity, pipeline parallelism vs
+sequential, int8 compressed gradient sync, ZeRO-1 spec shape, and a
+subprocess mini dry-run (forced host devices) exercising the real
+pjit path on a (2, 2, 2) pod-data-model mesh."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config, input_specs
+from repro.distribution.sharding import (batch_shardings, cache_shardings,
+                                         param_pspec, param_shardings,
+                                         zero1_shardings)
+from repro.models import init_params
+from repro.models.serve import cache_spec
+
+
+def _mesh_1x1():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_shardings_cover_every_leaf(arch):
+    """Every param leaf gets a spec whose sharded dims divide evenly."""
+    cfg = get_config(arch)
+    key = jax.random.PRNGKey(0)
+    specs = jax.eval_shape(lambda k: init_params(cfg, k), key)
+    tp = 16
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    n_sharded = 0
+    for path, leaf in flat:
+        ps = "/".join(str(getattr(p, "key", p)) for p in path)
+        spec = param_pspec(ps, leaf.shape, cfg, tp)
+        assert len(spec) <= len(leaf.shape), (ps, spec, leaf.shape)
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax == "model":
+                assert dim % tp == 0, \
+                    f"{arch} {ps}: dim {dim} not divisible by tp={tp}"
+                n_sharded += 1
+    # the big matrices must actually be sharded, not silently replicated
+    assert n_sharded >= 4, f"{arch}: almost nothing sharded"
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "mixtral-8x22b",
+                                  "rwkv6-1.6b", "zamba2-1.2b"])
+@pytest.mark.parametrize("shape", ["decode_32k", "long_500k"])
+def test_cache_shardings_valid(arch, shape):
+    cfg = get_config(arch)
+    from repro.configs import cell_applicable
+    if not cell_applicable(cfg, shape)[0]:
+        pytest.skip("cell skipped by design")
+    mesh = _mesh_1x1()
+    specs = input_specs(cfg, shape)
+    shardings = cache_shardings(cfg, mesh, specs["cache"])
+    for s in jax.tree.leaves(shardings,
+                             is_leaf=lambda x: hasattr(x, "spec")):
+        assert hasattr(s, "spec")
+
+
+def test_zero1_adds_data_axis():
+    cfg = get_config("qwen1.5-110b")
+    mesh = _mesh_1x1()
+    key = jax.random.PRNGKey(0)
+    specs = jax.eval_shape(lambda k: init_params(cfg, k), key)
+    z = zero1_shardings(cfg, mesh, specs)
+    found_data = 0
+    for s in jax.tree.leaves(z, is_leaf=lambda x: hasattr(x, "spec")):
+        if any(ax == "data" for ax in jax.tree.leaves(tuple(s.spec))):
+            found_data += 1
+    assert found_data > 10, "ZeRO-1 did not shard moments over data"
+
+
+def test_pipeline_matches_sequential():
+    import multiprocessing
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.distribution.pipeline import pipeline_apply, split_stages
+mesh = jax.make_mesh((4,), ("pipe",), axis_types=(jax.sharding.AxisType.Auto,))
+L, D, M, mb = 8, 16, 6, 4
+Ws = jax.random.normal(jax.random.PRNGKey(0), (L, D, D)) * 0.1
+layer_fn = lambda w, x: jnp.tanh(x @ w)
+xs = jax.random.normal(jax.random.PRNGKey(1), (M, mb, D))
+ref = xs
+for i in range(L):
+    ref = jax.vmap(lambda x: layer_fn(Ws[i], x))(ref)
+out = pipeline_apply(mesh, layer_fn, split_stages(Ws, 4), xs)
+assert np.allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+print("PIPE_OK")
+"""
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True,
+                       env={**os.environ,
+                            "PYTHONPATH": os.path.abspath("src")})
+    assert "PIPE_OK" in r.stdout, r.stderr[-2000:]
+
+
+def test_compressed_psum_error_feedback():
+    """int8 EF-psum: single-step error bounded, EF residual carries it."""
+    from repro.distribution.compression import (dequantize_int8,
+                                                quantize_int8)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(1000).astype(np.float32) * 3
+    q, s, n = quantize_int8(jnp.asarray(x), block=128)
+    back = dequantize_int8(q, s, n, x.shape)
+    err = np.abs(np.asarray(back) - x)
+    # int8 with per-block scales: error < scale = max|block|/127
+    assert err.max() < np.abs(x).max() / 127 + 1e-6
+
+
+def test_dryrun_subprocess_mini_pod():
+    """Real pjit lower+compile on a (2,2,2) pod mesh with 8 host devices,
+    reduced configs — the multi-pod path end to end in miniature."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, json
+from repro.configs import get_config
+from repro.launch.dryrun import lower_cell
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+for arch in ("smollm-135m", "mixtral-8x22b", "rwkv6-1.6b"):
+    cfg = get_config(arch, reduced=True)
+    lowered, compiled, chips = lower_cell(cfg, "train_4k", mesh,
+                                          scale_batch=8 / 256)
+    assert compiled is not None
+    mem = compiled.memory_analysis()
+    assert mem.temp_size_in_bytes >= 0
+    print(arch, "OK")
+print("DRYRUN_OK")
+"""
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=600,
+                       env={**os.environ,
+                            "PYTHONPATH": os.path.abspath("src")})
+    assert "DRYRUN_OK" in r.stdout, (r.stdout[-500:], r.stderr[-2000:])

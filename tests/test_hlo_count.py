@@ -1,0 +1,112 @@
+"""The trip-count-aware HLO analyzer vs hand-computed programs — the tool
+every roofline number flows through, so it gets its own tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_count import analyze_hlo_text, parse_hlo
+from repro.launch.analysis import collective_bytes
+
+
+def _compiled_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_flops_exact():
+    W = jnp.zeros((7, 256, 512), jnp.float32)
+    x0 = jnp.zeros((128, 256), jnp.float32)
+    P = jnp.zeros((512, 256), jnp.float32)
+
+    def f(x, Ws):
+        def body(c, w):
+            return (c @ w) @ P, None
+        c, _ = jax.lax.scan(body, x, Ws)
+        return c @ jnp.zeros((256, 64), jnp.float32)
+
+    cost = analyze_hlo_text(_compiled_text(f, x0, W))
+    expected = 7 * (2 * 128 * 256 * 512 + 2 * 128 * 512 * 256) \
+        + 2 * 128 * 256 * 64
+    assert abs(cost.flops - expected) / expected < 1e-6
+
+
+def test_nested_scan_flops_exact():
+    x0 = jnp.zeros((128, 256), jnp.float32)
+
+    def g(x):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ jnp.zeros((256, 256)), None
+            c, _ = jax.lax.scan(inner, c, None, length=3)
+            return c, None
+        c, _ = jax.lax.scan(outer, x, None, length=5)
+        return c
+
+    cost = analyze_hlo_text(_compiled_text(g, x0))
+    expected = 5 * 3 * 2 * 128 * 256 * 256
+    assert abs(cost.flops - expected) / expected < 1e-6
+
+
+def test_batched_dot_flops():
+    a = jnp.zeros((4, 32, 64), jnp.float32)
+    b = jnp.zeros((4, 64, 16), jnp.float32)
+    cost = analyze_hlo_text(_compiled_text(
+        lambda x, y: jax.lax.dot_general(
+            x, y, (((2,), (1,)), ((0,), (0,)))), a, b))
+    expected = 2 * 4 * 32 * 64 * 16
+    assert abs(cost.flops - expected) / expected < 1e-6
+
+
+def test_bytes_floor():
+    """Program must be charged at least its inputs+outputs once."""
+    a = jnp.zeros((1024, 1024), jnp.float32)
+
+    def f(x):
+        return x @ x
+
+    cost = analyze_hlo_text(_compiled_text(f, a))
+    floor = 2 * 1024 * 1024 * 4
+    assert cost.bytes >= floor
+
+
+def test_dus_charged_by_slice():
+    """Updating one row of a big buffer must not charge the whole buffer."""
+    buf = jnp.zeros((1024, 1024), jnp.float32)
+    row = jnp.ones((1, 1024), jnp.float32)
+
+    def f(b, r, i):
+        def body(carry, t):
+            return jax.lax.dynamic_update_slice(carry, r, (i + t, 0)), None
+        out, _ = jax.lax.scan(body, b, jnp.arange(8))
+        return out
+
+    cost = analyze_hlo_text(_compiled_text(
+        f, buf, row, jax.ShapeDtypeStruct((), jnp.int32)))
+    # 8 updates of 4KB-row + buffer in/out(+copy slack) << 8 x 4MB
+    assert cost.adjusted_bytes < 8 * 1024 * 1024 * 4 * 2
+
+
+def test_collective_parser_formats():
+    sample = """
+  %all-reduce.153 = f32[4,4096]{1,0} all-reduce(%wrapped_reduce), channel_id=1
+  %all-reduce.273 = (f32[4,4096,48]{1,0,2}, f32[4,4096,16]{2,1,0}) all-reduce(%a, %b)
+  %ag = f32[4,4096,192]{1,0,2} all-gather(%x), dimensions={2}
+  %cp = f32[4,1,4096,16]{3,2,1,0} collective-permute(%y), channel_id=12
+  %ar-start = f32[8,8]{1,0} all-reduce-start(%z), channel_id=9
+  %ar-done = f32[8,8]{1,0} all-reduce-done(%ar-start)
+"""
+    cb = collective_bytes(sample)
+    assert cb["all-reduce"] == (4 * 4096 + 4 * 4096 * 48 + 4 * 4096 * 16
+                                + 64) * 4
+    assert cb["all-gather"] == 4 * 4096 * 192 * 4
+    assert cb["collective-permute"] == 4 * 4096 * 16 * 4
+    assert cb["count"] == 5           # 2 ar + ar-start + ag + cp
+
+
+def test_parse_hlo_structure():
+    text = _compiled_text(lambda x: jnp.tanh(x @ x), jnp.zeros((64, 64)))
+    comps, entry = parse_hlo(text)
+    assert entry is not None
+    assert entry in comps
+    assert len(comps[entry].ops) > 0

@@ -1,0 +1,144 @@
+"""Per-kernel correctness: shape/dtype sweeps, Pallas interpret mode vs the
+pure-jnp oracle. Integer kernels must match bit-exactly; float kernels to
+tight tolerances."""
+
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+# -- int8 GEMM ------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,K,N", [
+    (8, 16, 8), (128, 128, 128), (100, 300, 180), (1, 512, 64),
+    (257, 129, 65), (64, 1024, 256),
+])
+def test_gemm_int8_sweep(rng, M, K, N):
+    x = rng.integers(-128, 128, (M, K)).astype(np.int8)
+    w = rng.integers(-128, 128, (K, N)).astype(np.int8)
+    out = ops.gemm_int8(x, w, backend="interpret")
+    expect = x.astype(np.int32) @ w.astype(np.int32)
+    assert np.array_equal(np.asarray(out), expect)
+
+
+@pytest.mark.parametrize("blocks", [dict(bm=32, bn=32, bk=32),
+                                    dict(bm=128, bn=128, bk=64)])
+def test_gemm_int8_requant(rng, blocks):
+    M, K, N = 96, 160, 144
+    x = rng.integers(-128, 128, (M, K)).astype(np.int8)
+    w = rng.integers(-128, 128, (K, N)).astype(np.int8)
+    mult = (rng.random(N) * 0.001 + 1e-5).astype(np.float32)
+    out = ops.gemm_int8(x, w, mult, backend="interpret", **blocks)
+    expect = ref.gemm_int8(x, w, mult)
+    assert np.array_equal(np.asarray(out), np.asarray(expect))
+    assert out.dtype == np.int8
+
+
+# -- conv2d implicit im2col --------------------------------------------------------
+
+@pytest.mark.parametrize("H,W,C,N,k,stride,pad", [
+    (16, 16, 3, 8, 3, 1, 1),
+    (17, 19, 6, 24, 3, 2, 1),
+    (14, 14, 8, 16, 1, 1, 0),
+    (32, 20, 4, 32, 5, 2, 2),
+    (9, 9, 16, 8, 7, 1, 3),
+])
+def test_conv2d_sweep(rng, H, W, C, N, k, stride, pad):
+    x = rng.integers(-128, 128, (H, W, C)).astype(np.int8)
+    w = rng.integers(-128, 128, (k * k * C, N)).astype(np.int8)
+    out = ops.conv2d_int8(x, w, kh=k, kw=k, stride=stride, padding=pad,
+                          backend="interpret")
+    expect = ref.conv2d_int8(x, w, stride=stride, padding=pad)
+    assert np.array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_conv2d_matches_core_executor(rng):
+    """Kernel oracle == repro.core.executor im2col semantics."""
+    from repro.core.executor import im2col
+    H, W, C, N, k = 12, 12, 5, 7, 3
+    x = rng.integers(-128, 128, (H, W, C)).astype(np.int8)
+    w = rng.integers(-128, 128, (k * k * C, N)).astype(np.int8)
+    cols = im2col(x, k, k, 1, 1)
+    expect = (cols.astype(np.int32) @ w.astype(np.int32)).reshape(
+        H, W, N)
+    out = ref.conv2d_int8(x, w, stride=1, padding=1)
+    assert np.array_equal(np.asarray(out), expect)
+
+
+# -- flash attention ----------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Hq,Hkv,Sq,Skv,D,causal,window", [
+    (1, 4, 4, 64, 64, 32, True, None),
+    (2, 8, 2, 100, 100, 64, True, None),
+    (2, 8, 2, 100, 100, 64, True, 37),
+    (1, 4, 1, 33, 77, 16, True, None),       # decode-ish offset
+    (2, 4, 4, 64, 64, 32, False, None),
+    (2, 8, 2, 1, 100, 64, True, None),       # single-token decode
+])
+def test_flash_attention_sweep(rng, B, Hq, Hkv, Sq, Skv, D, causal,
+                               window):
+    q = rng.standard_normal((B, Hq, Sq, D)).astype(np.float32)
+    k = rng.standard_normal((B, Hkv, Skv, D)).astype(np.float32)
+    v = rng.standard_normal((B, Hkv, Skv, D)).astype(np.float32)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              backend="interpret", bq=32, bk=32)
+    expect = ref.flash_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=3e-5, rtol=1e-4)
+
+
+def test_blockwise_attention_matches_oracle(rng):
+    from repro.models.attention import attention_blockwise
+    B, Hq, Hkv, S, D = 2, 4, 2, 200, 32
+    q = rng.standard_normal((B, Hq, S, D)).astype(np.float32)
+    k = rng.standard_normal((B, Hkv, S, D)).astype(np.float32)
+    v = rng.standard_normal((B, Hkv, S, D)).astype(np.float32)
+    for window in (None, 50):
+        out = attention_blockwise(q, k, v, causal=True, window=window,
+                                  q_chunk=64, kv_chunk=48)
+        expect = ref.flash_attention(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   atol=3e-5, rtol=1e-4)
+
+
+# -- ssm scan -----------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,T,D,ct", [
+    (1, 16, 8, 4), (2, 100, 32, 16), (2, 128, 64, 128), (3, 33, 16, 8),
+])
+def test_ssm_scan_sweep(rng, B, T, D, ct):
+    a = (rng.random((B, T, D)) * 0.9 + 0.05).astype(np.float32)
+    x = rng.standard_normal((B, T, D)).astype(np.float32)
+    seq = ref.ssm_scan_sequential(a, x)
+    assoc = ref.ssm_scan(a, x)
+    pall = ops.ssm_scan(a, x, backend="interpret", ct=ct)
+    np.testing.assert_allclose(np.asarray(assoc), np.asarray(seq),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(pall), np.asarray(seq),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_wkv_chunked_matches_sequential(rng):
+    """RWKV6 chunked WKV == step-by-step recurrence."""
+    import jax.numpy as jnp
+    from repro.models.rwkv import wkv_chunked
+    B, H, T, dk, dv = 2, 3, 50, 8, 8
+    r = rng.standard_normal((B, H, T, dk)).astype(np.float32)
+    k = rng.standard_normal((B, H, T, dk)).astype(np.float32)
+    v = rng.standard_normal((B, H, T, dv)).astype(np.float32)
+    w = (rng.random((B, H, T, dk)) * 0.5 + 0.5).astype(np.float32)
+    u = rng.standard_normal((H, dk)).astype(np.float32)
+    y, S_fin = wkv_chunked(jnp.asarray(r), jnp.asarray(k), jnp.asarray(v),
+                           jnp.asarray(w), jnp.asarray(u), chunk=16)
+    # sequential reference
+    S = np.zeros((B, H, dk, dv), np.float64)
+    ys = np.zeros((B, H, T, dv), np.float64)
+    for t in range(T):
+        kv = np.einsum("bhk,bhv->bhkv", k[:, :, t], v[:, :, t])
+        ys[:, :, t] = np.einsum(
+            "bhk,bhkv->bhv", r[:, :, t],
+            S + u[None, :, :, None] * kv)
+        S = w[:, :, t][..., None] * S + kv
+    np.testing.assert_allclose(np.asarray(y), ys, atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(S_fin), S, atol=2e-3, rtol=2e-3)

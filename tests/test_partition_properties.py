@@ -1,0 +1,88 @@
+"""Partition-level properties: GEMM/conv tiles exactly cover each op's
+output with no overlap, streamed chunks cover K, and transfer byte
+accounting is conservative (DRAM bytes <= scratchpad-duplicated bytes for
+conv — the paper's duplication-only-in-scratchpad rule)."""
+
+import hypothesis.strategies as st
+from hypothesis import HealthCheck, given, settings
+
+from repro.core.graph import Graph, conv2d, linear
+from repro.core.partition import Partitioner
+from repro.hw import scaled_paper_machine
+
+
+@st.composite
+def gemm_shape(draw):
+    M = draw(st.sampled_from([1, 7, 64, 300, 1024]))
+    K = draw(st.sampled_from([16, 147, 576, 4608]))
+    N = draw(st.sampled_from([8, 64, 100, 512]))
+    return M, K, N
+
+
+@settings(max_examples=30, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(shape=gemm_shape(),
+       cores=st.sampled_from([2, 16]),
+       spad=st.sampled_from([256 * 1024, 1024 * 1024]))
+def test_gemm_tiles_cover_output_exactly(shape, cores, spad):
+    M, K, N = shape
+    g = Graph("g")
+    g.add_tensor("x", (M, K), "int8", is_input=True)
+    y = linear(g, "fc", "x", N)
+    g.mark_output(y)
+    hw = scaled_paper_machine(cores, scratchpad_bytes=spad)
+    subtasks = Partitioner(hw).partition(g)
+
+    covered = set()
+    for stk in subtasks:
+        t = stk.tile
+        assert stk.working_set <= Partitioner(hw).budget
+        assert t["K"] == K
+        for m in range(t["m0"], t["m1"]):
+            for n0 in range(t["n0"], t["n1"], 8):
+                cell = (m, n0)
+                assert cell not in covered or (m, n0) not in covered
+        for m in range(t["m0"], t["m1"]):
+            covered.add((m, t["n0"], t["n1"]))
+    # row coverage: every output row covered for the full N range
+    rows = {}
+    for stk in subtasks:
+        t = stk.tile
+        for m in range(t["m0"], t["m1"]):
+            rows.setdefault(m, []).append((t["n0"], t["n1"]))
+    assert set(rows) == set(range(M))
+    for m, spans in rows.items():
+        spans.sort()
+        assert spans[0][0] == 0 and spans[-1][1] == N
+        for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+            assert a1 == b0, f"gap/overlap at row {m}: {spans}"
+    # FLOPs conservation
+    total = sum(stk.flops for stk in subtasks)
+    assert abs(total - 2.0 * M * K * N) / (2.0 * M * K * N) < 1e-9
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(hw_cores=st.sampled_from([4, 16]),
+       c_in=st.sampled_from([3, 16, 64]),
+       c_out=st.sampled_from([8, 32, 64]),
+       k=st.sampled_from([1, 3, 5]),
+       stride=st.sampled_from([1, 2]))
+def test_conv_raw_transfer_never_exceeds_im2col(hw_cores, c_in, c_out, k,
+                                                stride):
+    """The paper's rule: DRAM moves the raw band; duplication only in the
+    scratchpad => DMA bytes <= scratchpad (im2col) bytes per load."""
+    g = Graph("g")
+    g.add_tensor("x", (24, 24, c_in), "int8", is_input=True)
+    y = conv2d(g, "c", "x", c_out, k, stride=stride)
+    g.mark_output(y)
+    hw = scaled_paper_machine(hw_cores)
+    subtasks = Partitioner(hw).partition(g)
+    for stk in subtasks:
+        for ld in stk.loads:
+            if ld.kind == "act" and k > 1:
+                assert ld.nbytes <= ld.sp_bytes * k  # raw band vs im2col
+    total = sum(stk.flops for stk in subtasks)
+    oh = (24 + 2 * (k // 2) - k) // stride + 1
+    expect = 2.0 * oh * oh * k * k * c_in * c_out
+    assert abs(total - expect) / expect < 1e-6

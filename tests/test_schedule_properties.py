@@ -1,0 +1,115 @@
+"""Property tests (hypothesis) for the paper's core guarantees:
+
+  P1  exclusive DMA channel — no two transactions overlap (freedom from
+      interference by design);
+  P2  dataflow soundness — every subtask computes after its deps, after
+      its loads; model order preserved per core;
+  P3  every subtask scheduled exactly once;
+  P4  WCET compositionality — replaying the WCET-built schedule with any
+      actual compute speed <= the bound never exceeds the WCET makespan;
+  P5  scratchpad budget — every working set fits the partitioner budget;
+  P6  static beats TDMA — the paper's throughput claim (§II): the static
+      schedule's makespan is never worse than TDMA arbitration.
+"""
+
+from __future__ import annotations
+
+import hypothesis.strategies as st
+from hypothesis import HealthCheck, given, settings
+
+from repro.core.cnn import small_cnn
+from repro.core.graph import Graph, OpNode, eltwise, linear, requant
+from repro.core.mapping import map_reverse_affinity, map_round_robin
+from repro.core.partition import Partitioner
+from repro.core.schedule import compute_schedule, validate_schedule
+from repro.core.wcet import critical_path
+from repro.hw import scaled_paper_machine
+
+
+@st.composite
+def random_graph(draw):
+    """Random small MLP-ish graphs (linear chains + skip adds)."""
+    g = Graph("rand")
+    rows = draw(st.sampled_from([1, 4, 16]))
+    width = draw(st.sampled_from([32, 64, 128]))
+    g.add_tensor("input", (rows, width), "int8", is_input=True)
+    x = "input"
+    skip = None
+    n_ops = draw(st.integers(2, 6))
+    for i in range(n_ops):
+        kind = draw(st.sampled_from(["linear", "relu", "add"]))
+        if kind == "linear":
+            n_out = draw(st.sampled_from([32, 64, 128]))
+            x = linear(g, f"fc{i}", x, n_out)
+            x = requant(g, f"rq{i}", x)
+            width = n_out
+        elif kind == "relu":
+            x = eltwise(g, f"relu{i}", "relu", [x])
+        elif skip is not None and g.tensors[skip].shape == \
+                g.tensors[x].shape:
+            x = eltwise(g, f"add{i}", "add", [x, skip])
+        skip = x
+    g.mark_output(x)
+    g.validate()
+    return g
+
+
+@st.composite
+def machine(draw):
+    cores = draw(st.sampled_from([1, 2, 4, 8]))
+    sp = draw(st.sampled_from([64 * 1024, 256 * 1024, 1024 * 1024]))
+    return scaled_paper_machine(cores, scratchpad_bytes=sp)
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(g=random_graph(), hw=machine(),
+       mapper=st.sampled_from(["affinity", "rr"]))
+def test_schedule_invariants(g, hw, mapper):
+    part = Partitioner(hw)
+    subtasks = part.partition(g)
+    # P5: budget respected
+    for stk in subtasks:
+        assert stk.working_set <= part.budget
+    mfun = map_reverse_affinity if mapper == "affinity" else map_round_robin
+    mapping = mfun(subtasks, hw)
+    wcet_sched = compute_schedule(subtasks, mapping, hw, wcet=True)
+    # P1-P3
+    validate_schedule(wcet_sched, subtasks, mapping)
+
+    # P4: WCET compositionality under any speed in (0, 1] of the bound
+    for scale in (1.0, 0.71, 0.33):
+        actual = compute_schedule(subtasks, mapping, hw, wcet=False,
+                                  time_scale=scale)
+        validate_schedule(actual, subtasks, mapping)
+        assert actual.makespan <= wcet_sched.makespan * (1 + 1e-9), \
+            f"actual {actual.makespan} > WCET {wcet_sched.makespan}"
+
+    # lower bound sanity: critical path <= makespan
+    assert critical_path(subtasks, hw) <= wcet_sched.makespan * (1 + 1e-9)
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(g=random_graph(), hw=machine())
+def test_static_beats_tdma(g, hw):
+    part = Partitioner(hw)
+    subtasks = part.partition(g)
+    mapping = map_reverse_affinity(subtasks, hw)
+    static = compute_schedule(subtasks, mapping, hw, wcet=True)
+    tdma = compute_schedule(subtasks, mapping, hw, wcet=True,
+                            arbitration="tdma")
+    # P6 (the paper's throughput argument) with tolerance for tiny graphs
+    assert static.makespan <= tdma.makespan * 1.05
+
+
+def test_small_cnn_schedule():
+    hw = scaled_paper_machine(4)
+    g = small_cnn()
+    part = Partitioner(hw)
+    subtasks = part.partition(g)
+    mapping = map_reverse_affinity(subtasks, hw)
+    sched = compute_schedule(subtasks, mapping, hw)
+    validate_schedule(sched, subtasks, mapping)
+    assert sched.makespan > 0
+    assert sched.bytes_saved_reuse >= 0

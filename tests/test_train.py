@@ -1,0 +1,162 @@
+"""Training substrate: optimizer schedules, checkpoint atomicity/resume,
+fault recovery with injected failures, straggler watchdog, data pipeline
+determinism, gradient-compression math, microbatch equivalence."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.models import init_params
+from repro.models.transformer import train_loss
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault import (InjectedFailure, StragglerWatchdog,
+                               run_with_recovery)
+from repro.train.optimizer import (OptConfig, adamw_update, init_opt_state,
+                                   schedule_lr)
+from repro.train.step import make_train_step
+
+
+# -- optimizer -------------------------------------------------------------------
+
+def test_schedules():
+    cfg = OptConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                    schedule="cosine", min_lr_ratio=0.1)
+    lrs = [float(schedule_lr(cfg, jnp.int32(s))) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1e-3 + 1e-9           # warmup
+    assert lrs[99] < lrs[50]                        # decay
+    assert lrs[99] >= 0.1 * 1e-3 - 1e-9
+
+    wsd = OptConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                    schedule="wsd", wsd_decay_frac=0.1)
+    lrs = [float(schedule_lr(wsd, jnp.int32(s))) for s in range(100)]
+    # stable plateau between warmup and decay start
+    plateau = lrs[15:85]
+    assert max(plateau) - min(plateau) < 1e-9
+    assert lrs[-1] < 0.2 * 1e-3                     # decayed tail
+
+
+def test_adamw_reduces_loss_quadratic():
+    opt_cfg = OptConfig(lr=0.05, warmup_steps=1, total_steps=200,
+                        weight_decay=0.0)
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros((3, 1))}
+
+    def loss(p):
+        return jnp.sum((p["w"][:, 0] - target) ** 2)
+
+    state = init_opt_state(params)
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(opt_cfg, g, state, params)
+    assert float(loss(params)) < 1e-2
+
+
+def test_microbatch_equivalence():
+    """Grad accumulation must match the single-batch gradient step."""
+    cfg = get_config("smollm-135m", reduced=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 16))),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 16)))}
+    opt_cfg = OptConfig(total_steps=10)
+    s1 = make_train_step(cfg, opt_cfg, microbatches=1)
+    s4 = make_train_step(cfg, opt_cfg, microbatches=4)
+    p1, _, m1 = jax.jit(s1)(params, init_opt_state(params), batch)
+    p4, _, m4 = jax.jit(s4)(params, init_opt_state(params), batch)
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 1e-3
+    d = max(float(jnp.abs(a - b).max())
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)))
+    assert d < 5e-3, f"microbatched update diverged: {d}"
+
+
+# -- checkpointing -----------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12).reshape(3, 4).astype(jnp.float32),
+            "b": {"c": jnp.ones((5,), jnp.bfloat16),
+                  "step": jnp.int32(7)}}
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    mgr.save(3, tree)
+    mgr.wait()
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
+    restored, step = mgr.restore(like)
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False, keep=2)
+    tree = {"x": jnp.ones((2,))}
+    for s in (1, 5, 9):
+        mgr.save(s, tree)
+    assert mgr.latest_step() == 9
+    assert mgr.all_steps() == [5, 9]
+
+
+def test_recovery_from_injected_failures(tmp_path):
+    """Crash at steps 4 and 7; loop must resume from checkpoints and
+    produce the exact same final state as a failure-free run."""
+    def step_fn(state, step):
+        return state + step
+
+    ckpt = CheckpointManager(str(tmp_path / "a"), async_save=False)
+    final, hist = run_with_recovery(
+        step_fn, jnp.float32(0), 10, ckpt, save_every=2,
+        fail_at={4: InjectedFailure("node lost"),
+                 7: InjectedFailure("node lost")})
+    assert hist["restarts"] == 2
+    assert float(final) == sum(range(10))
+
+    ckpt2 = CheckpointManager(str(tmp_path / "b"), async_save=False)
+    clean, _ = run_with_recovery(step_fn, jnp.float32(0), 10, ckpt2,
+                                 save_every=2)
+    assert float(final) == float(clean)
+
+
+def test_straggler_watchdog():
+    wd = StragglerWatchdog(margin=2.0, warmup=3)
+    for s in range(5):
+        assert not wd.observe(s, 0.1)
+    assert wd.observe(5, 0.5)          # 5x median
+    assert len(wd.reports) == 1
+    assert wd.reports[0].duration_s == 0.5
+
+
+# -- data pipeline ------------------------------------------------------------------
+
+def test_data_determinism_and_sharding():
+    cfg = DataConfig(vocab_size=1000, seq_len=32, global_batch=8, seed=3)
+    ds = SyntheticTokens(cfg)
+    b1 = ds.batch(5)
+    b2 = ds.batch(5)
+    assert np.array_equal(b1["tokens"], b2["tokens"])      # deterministic
+    assert not np.array_equal(b1["tokens"], ds.batch(6)["tokens"])
+    # labels are next-token shifted
+    assert np.array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+    # shards partition the work deterministically
+    s0 = ds.batch(5, shard=0, n_shards=2)
+    s1 = ds.batch(5, shard=1, n_shards=2)
+    assert s0["tokens"].shape == (4, 32)
+    assert not np.array_equal(s0["tokens"], s1["tokens"])
+
+
+def test_e2e_training_reduces_loss(tmp_path):
+    """Short end-to-end run on the reduced smollm: loss must drop."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.train.loop import TrainConfig, train
+    cfg = get_config("smollm-135m", reduced=True)
+    mesh = make_host_mesh(data=1, model=1)
+    state, metrics = train(
+        cfg, mesh,
+        tc=TrainConfig(num_steps=30, log_every=1000,
+                       ckpt_dir=str(tmp_path)),
+        seq_len=64, global_batch=8)
+    losses = metrics["losses"]
+    assert losses[-1] < losses[0] - 0.3, \
+        f"no learning: {losses[0]:.3f} -> {losses[-1]:.3f}"

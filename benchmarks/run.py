@@ -3,9 +3,12 @@
   bench_wcet      WCET composition + vs-TDMA + mapping ablation
                   (paper Abstract, §II, §III.B)
   bench_schedule  cores x VLEN x scratchpad design-space sweep (paper §V)
+  bench_taskset   multi-network hyperperiod scheduling sweep (#nets x cores)
   bench_kernels   worker-core kernels (int8 GEMM / conv-im2col; §IV.A)
   bench_serving   per-token WCET for the assigned LM archs + engine
   roofline        §Roofline table from the multi-pod dry-run artifacts
+
+``--smoke`` runs a fast subset (taskset smoke sweep only) suitable for CI.
 
 Prints ``name,us_per_call,derived`` CSV at the end (harness contract).
 """
@@ -16,18 +19,27 @@ import sys
 import traceback
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
     csv_rows: list[tuple] = []
-    from . import bench_wcet, bench_schedule, bench_kernels, \
-        bench_serving, roofline
-    sections = [
-        ("wcet", lambda: (bench_wcet.run(csv_rows),
-                          bench_wcet.run_mapping_ablation(csv_rows))),
-        ("schedule_sweep", lambda: bench_schedule.run(csv_rows)),
-        ("kernels", lambda: bench_kernels.run(csv_rows)),
-        ("serving", lambda: bench_serving.run(csv_rows)),
-        ("roofline", lambda: roofline.run(csv_rows)),
-    ]
+    from . import bench_taskset
+    if smoke:
+        sections = [
+            ("taskset", lambda: bench_taskset.run(csv_rows, smoke=True)),
+        ]
+    else:
+        from . import bench_wcet, bench_schedule, bench_kernels, \
+            bench_serving, roofline
+        sections = [
+            ("wcet", lambda: (bench_wcet.run(csv_rows),
+                              bench_wcet.run_mapping_ablation(csv_rows))),
+            ("schedule_sweep", lambda: bench_schedule.run(csv_rows)),
+            ("taskset", lambda: bench_taskset.run(csv_rows)),
+            ("kernels", lambda: bench_kernels.run(csv_rows)),
+            ("serving", lambda: bench_serving.run(csv_rows)),
+            ("roofline", lambda: roofline.run(csv_rows)),
+        ]
     failed = []
     for name, fn in sections:
         try:

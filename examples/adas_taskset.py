@@ -1,0 +1,74 @@
+"""ADAS-style multi-network taskset on the paper's machine.
+
+The paper motivates its architecture with automated driving, where several
+networks run concurrently at different rates on one shared-memory fabric.
+This demo mixes:
+
+  * an object detector   (YOLOv5s-flavored CNN)   @ 30 Hz
+  * a lane-keeper        (small CNN)              @ 100 Hz
+  * a speech interface   (LM decode step)         @ 10 Hz
+
+and compiles them into ONE static hyperperiod schedule for the single DMA
+channel + worker cores, printing per-network WCET response bounds, the
+schedulability verdict, and the replay check that actual (faster) times
+never violate the bounds.
+
+    PYTHONPATH=src python examples/adas_taskset.py
+"""
+
+from repro.core import cnn
+from repro.core.lmgraph import lm_decode_graph
+from repro.core.taskset import NetworkSpec, schedule_taskset
+from repro.core.wcet import analyze_taskset
+from repro.hw import scaled_paper_machine
+from repro.models.config import ModelConfig
+
+
+def speech_decoder_graph():
+    """One decode step of a tiny speech-interface LM (2-layer stack kept
+    small enough for the paper machine's 1 MiB scratchpads)."""
+    cfg = ModelConfig(name="speech_lm", family="dense", num_layers=2,
+                      d_model=256, num_heads=4, num_kv_heads=4, d_ff=512,
+                      vocab_size=4096, act="gelu")
+    return lm_decode_graph(cfg, batch=1, cache_len=128)
+
+
+def main():
+    hw = scaled_paper_machine(16)
+    specs = [
+        NetworkSpec("detector", cnn.yolov5s_backbone(h=64, w=64, width=0.25),
+                    period_s=1 / 30),
+        NetworkSpec("lane_keeper", cnn.small_cnn(48, 48), period_s=1 / 100),
+        NetworkSpec("speech", speech_decoder_graph(), period_s=1 / 10),
+    ]
+
+    print("=" * 72)
+    print("ADAS taskset: detector@30Hz + lane-keeper@100Hz + speech@10Hz")
+    print(f"on {hw.name} ({hw.num_workers} cores, single DMA channel)")
+    print("=" * 72)
+    report, compiled = analyze_taskset(specs, hw, num_cores=16)
+    print(report.summary())
+    assert report.schedulable, "demo taskset should fit the paper machine"
+
+    print()
+    print("merged hyperperiod program: "
+          f"{len(compiled.schedule.dma)} DMA transactions, "
+          f"{len(compiled.schedule.compute)} compute slots, "
+          f"{report.total_jobs} jobs")
+
+    # compositionality at taskset level: replay every job at actual rates
+    bounds = {n.name: n.response_bound_s for n in report.networks}
+    schedule_taskset(compiled, hw, wcet=False)
+    print("\nWCET response bounds vs actual-rate replay:")
+    for spec in specs:
+        actual = compiled.response_bound(spec.name)
+        bound = bounds[spec.name]
+        assert actual <= bound * (1 + 1e-9)
+        print(f"  {spec.name:<12} replay {actual*1e3:7.3f} ms <= "
+              f"bound {bound*1e3:7.3f} ms  "
+              f"(tightness {actual/bound:.2f})")
+    print("\nall networks meet their deadlines; bounds hold under replay")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,10 @@ from .partition import Partitioner, Subtask, Transfer, PartitionError
 from .mapping import Mapping, map_reverse_affinity, map_round_robin
 from .schedule import (StaticSchedule, DMASlot, ComputeSlot, ScheduleError,
                        compute_schedule, validate_schedule)
-from .wcet import WCETReport, analyze, critical_path, subtask_wcet
+from .taskset import (NetworkSpec, Job, CompiledTaskset, TasksetError,
+                      hyperperiod, compile_taskset, schedule_taskset)
+from .wcet import (WCETReport, TasksetReport, NetworkVerdict, analyze,
+                   analyze_taskset, critical_path, subtask_wcet)
 from .executor import reference_forward, execute_schedule, init_params
 from . import cnn, quantize
 
@@ -21,7 +24,9 @@ __all__ = [
     "Graph", "OpNode", "TensorSpec", "Partitioner", "Subtask", "Transfer",
     "PartitionError", "Mapping", "map_reverse_affinity", "map_round_robin",
     "StaticSchedule", "DMASlot", "ComputeSlot", "ScheduleError",
-    "compute_schedule", "validate_schedule", "WCETReport", "analyze",
-    "critical_path", "subtask_wcet", "reference_forward", "execute_schedule",
-    "init_params", "cnn", "quantize",
+    "compute_schedule", "validate_schedule", "NetworkSpec", "Job",
+    "CompiledTaskset", "TasksetError", "hyperperiod", "compile_taskset",
+    "schedule_taskset", "WCETReport", "TasksetReport", "NetworkVerdict",
+    "analyze", "analyze_taskset", "critical_path", "subtask_wcet",
+    "reference_forward", "execute_schedule", "init_params", "cnn", "quantize",
 ]

@@ -149,7 +149,8 @@ def compute_schedule(subtasks: list[Subtask], mapping: Mapping,
                      arbitration: str = "static",
                      tdma_quantum: float | None = None,
                      weight_cache_bytes: int | None = None,
-                     time_scale: float = 1.0) -> StaticSchedule:
+                     time_scale: float = 1.0,
+                     release: dict[int, float] | None = None) -> StaticSchedule:
     """Build the static schedule.
 
     wcet=True uses WCET-margined times (this is the schedule that ships);
@@ -157,10 +158,13 @@ def compute_schedule(subtasks: list[Subtask], mapping: Mapping,
     tests/benchmarks to show the bound holds).
     time_scale multiplies compute times only (models real cores running
     somewhere between peak and WCET).
+    release maps sid -> earliest time any of its transfers or compute may
+    start (job release in a multi-network taskset; see repro.core.taskset).
     """
     n = mapping.num_cores
     by_id = {st.sid: st for st in subtasks}
     q: list[list[int]] = [mapping.subtasks_on(c) for c in range(n)]
+    rel = release or {}
 
     def dma_t(nbytes: float) -> float:
         return hw.wcet_dma_s(nbytes) if wcet else hw.dma_time_s(nbytes)
@@ -220,12 +224,15 @@ def compute_schedule(subtasks: list[Subtask], mapping: Mapping,
 
     def prefetch_gate(c: int, idx: int) -> float:
         """Earliest time loads for queue item idx may start on core c."""
+        released = rel.get(q[c][idx], 0.0)
         if idx == 0:
-            return 0.0
+            return released
         prev = q[c][idx - 1]
         if hw.dual_ported:
-            return compute_start.get(prev, float("inf"))
-        return compute_end.get(prev, float("inf"))
+            gate = compute_start.get(prev, float("inf"))
+        else:
+            gate = compute_end.get(prev, float("inf"))
+        return max(gate, released)
 
     for st in subtasks:
         bytes_total += st.load_bytes() + (st.store.nbytes if st.store else 0)
@@ -255,7 +262,8 @@ def compute_schedule(subtasks: list[Subtask], mapping: Mapping,
             same_core_dep_end = max(
                 [compute_end.get(d, 0.0) for d in st.deps
                  if core_of[d] == c] + [0.0])
-            start = max(loads_done_at[c], prev_end, same_core_dep_end)
+            start = max(loads_done_at[c], prev_end, same_core_dep_end,
+                        rel.get(sid, 0.0))
             end = start + comp_t(st)
             compute_start[sid], compute_end[sid] = start, end
             comp_slots.append(ComputeSlot(start, end, c, sid))
@@ -382,7 +390,8 @@ def compute_schedule(subtasks: list[Subtask], mapping: Mapping,
 
 
 def validate_schedule(sched: StaticSchedule, subtasks: list[Subtask],
-                      mapping: Mapping) -> None:
+                      mapping: Mapping,
+                      release: dict[int, float] | None = None) -> None:
     """Structural invariants (property-tested): raise on any violation."""
     # 1. exclusive DMA channel (the interference-freedom guarantee)
     if sched.arbitration == "static":
@@ -423,6 +432,18 @@ def validate_schedule(sched: StaticSchedule, subtasks: list[Subtask],
     for sid, le in load_end.items():
         if start_of[sid] < le - 1e-9:
             raise ScheduleError(f"subtask {sid} computes before loads done")
+    # 6. nothing happens before a subtask's job release
+    if release:
+        for s in sched.dma:
+            if s.start < release.get(s.sid, 0.0) - 1e-9:
+                raise ScheduleError(
+                    f"DMA for subtask {s.sid} starts at {s.start} before "
+                    f"release {release[s.sid]}")
+        for s in sched.compute:
+            if s.start < release.get(s.sid, 0.0) - 1e-9:
+                raise ScheduleError(
+                    f"subtask {s.sid} computes at {s.start} before "
+                    f"release {release[s.sid]}")
 
 
 def _overlaps(a: tuple, b: tuple) -> bool:

@@ -21,6 +21,8 @@ from .graph import Graph
 from .partition import Partitioner, Subtask
 from .mapping import Mapping, map_reverse_affinity
 from .schedule import StaticSchedule, compute_schedule, validate_schedule
+from .taskset import (CompiledTaskset, NetworkSpec, compile_taskset,
+                      schedule_taskset)
 from ..hw import HardwareModel
 
 
@@ -116,3 +118,112 @@ def analyze(graph: Graph, hw: HardwareModel,
         per_op_wcet=per_op,
     )
     return report, sched, subtasks, mapping
+
+
+# -- multi-network taskset analysis ------------------------------------------
+
+@dataclasses.dataclass
+class NetworkVerdict:
+    """Per-network schedulability result over the hyperperiod."""
+
+    name: str
+    period_s: float
+    deadline_s: float
+    n_jobs: int
+    response_bound_s: float              # max job response (WCET times)
+    num_subtasks: int                    # per job
+
+    @property
+    def schedulable(self) -> bool:
+        return self.response_bound_s <= self.deadline_s * (1 + 1e-9)
+
+    @property
+    def slack_s(self) -> float:
+        return self.deadline_s - self.response_bound_s
+
+    def row(self) -> str:
+        return (f"{self.name:<14}{1.0 / self.period_s:>8.1f} Hz  "
+                f"D={self.deadline_s * 1e3:7.2f} ms  "
+                f"R={self.response_bound_s * 1e3:7.2f} ms  "
+                f"slack={self.slack_s * 1e3:+8.2f} ms  "
+                f"{'OK' if self.schedulable else 'MISS'}")
+
+
+@dataclasses.dataclass
+class TasksetReport:
+    """Hyperperiod-level WCET analysis of a multi-network taskset.
+
+    `schedulable` requires (a) every network's worst-case response bound to
+    meet its deadline and (b) the whole hyperperiod program to drain within
+    the hyperperiod (`fits_hyperperiod`), so the management-core program can
+    loop back-to-back without the next hyperperiod's DMA colliding with a
+    still-running tail.
+    """
+
+    hw_name: str
+    num_cores: int
+    hyperperiod_s: float
+    networks: list[NetworkVerdict]
+    makespan_s: float
+    dma_utilization: float
+    compute_utilization: float
+    total_subtasks: int
+    total_jobs: int
+
+    @property
+    def fits_hyperperiod(self) -> bool:
+        return self.makespan_s <= self.hyperperiod_s * (1 + 1e-9)
+
+    @property
+    def schedulable(self) -> bool:
+        return self.fits_hyperperiod and all(n.schedulable
+                                             for n in self.networks)
+
+    def summary(self) -> str:
+        lines = [
+            f"Taskset[{len(self.networks)} nets on {self.hw_name} "
+            f"x{self.num_cores}] H={self.hyperperiod_s * 1e3:.2f} ms  "
+            f"makespan={self.makespan_s * 1e3:.2f} ms  "
+            f"({self.total_jobs} jobs, {self.total_subtasks} subtasks; "
+            f"dma util {self.dma_utilization:.1%}, "
+            f"core util {self.compute_utilization:.1%})"]
+        lines += ["  " + n.row() for n in self.networks]
+        lines.append(f"  verdict: "
+                     f"{'SCHEDULABLE' if self.schedulable else 'NOT SCHEDULABLE'}"
+                     + ("" if self.fits_hyperperiod
+                        else " (hyperperiod overrun)"))
+        return "\n".join(lines)
+
+
+def analyze_taskset(specs: list[NetworkSpec], hw: HardwareModel,
+                    num_cores: int | None = None,
+                    arbitration: str = "static",
+                    validate: bool = True
+                    ) -> tuple[TasksetReport, CompiledTaskset]:
+    """Multi-network pipeline: compile the hyperperiod job set, schedule it
+    on the shared DMA channel + worker cores with WCET times, and derive
+    per-network response-time bounds and a schedulability verdict."""
+    compiled = compile_taskset(specs, hw, num_cores)
+    sched = schedule_taskset(compiled, hw, wcet=True, arbitration=arbitration)
+    if validate:
+        validate_schedule(sched, compiled.subtasks, compiled.mapping,
+                          release=compiled.release)
+
+    verdicts = []
+    for i, spec in enumerate(compiled.specs):
+        jobs = compiled.jobs_of(spec.name)
+        verdicts.append(NetworkVerdict(
+            name=spec.name, period_s=spec.period_s, deadline_s=spec.deadline,
+            n_jobs=len(jobs),
+            response_bound_s=max(j.response for j in jobs),
+            num_subtasks=len(jobs[0].sids)))
+
+    report = TasksetReport(
+        hw_name=hw.name, num_cores=compiled.mapping.num_cores,
+        hyperperiod_s=compiled.hyperperiod_s, networks=verdicts,
+        makespan_s=sched.makespan,
+        dma_utilization=sched.dma_utilization(),
+        compute_utilization=sched.compute_utilization(),
+        total_subtasks=len(compiled.subtasks),
+        total_jobs=len(compiled.jobs))
+    return report, compiled

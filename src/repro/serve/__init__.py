@@ -1,8 +1,10 @@
 """Serving substrate: batched engine + WCET-bounded predictable mode."""
 
 from .engine import Request, ServeEngine
-from .predictable import (PredictableEngine, PredictableServeReport,
+from .predictable import (AdmissionError, MultiModelEngine,
+                          PredictableEngine, PredictableServeReport,
                           analyze_decode)
 
 __all__ = ["Request", "ServeEngine", "PredictableEngine",
-           "PredictableServeReport", "analyze_decode"]
+           "PredictableServeReport", "analyze_decode",
+           "MultiModelEngine", "AdmissionError"]

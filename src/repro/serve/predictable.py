@@ -6,15 +6,24 @@ paper's pipeline into a per-token WCET bound; the engine then enforces it
 as a deadline: every decode step is timed against the bound scaled by the
 machine-speed ratio, and violations are reported as stragglers — this is
 the real-time guarantee of the paper made operational for LM serving.
+
+`MultiModelEngine` extends this to a *taskset* of models sharing one
+machine: each model (a CNN graph or an LM decode step) is registered with
+a period/deadline, admission control runs the hyperperiod analysis
+(`repro.core.wcet.analyze_taskset`), and job execution over a hyperperiod
+is timed against the per-network response bounds.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
+from typing import Callable
 
+from ..core.graph import Graph
 from ..core.lmgraph import lm_decode_graph
-from ..core.wcet import analyze, WCETReport
+from ..core.taskset import CompiledTaskset, NetworkSpec
+from ..core.wcet import analyze, analyze_taskset, TasksetReport, WCETReport
 from ..hw import HardwareModel, TPU_V5E
 from ..models.config import ModelConfig
 from .engine import Request, ServeEngine
@@ -82,3 +91,126 @@ class PredictableEngine(ServeEngine):
         if per_step > deadline:
             self.deadline_misses += 1
         return out
+
+
+class AdmissionError(RuntimeError):
+    """Raised when a model cannot be admitted without breaking deadlines."""
+
+
+class MultiModelEngine:
+    """Deadline-enforcing multi-model serving on one shared machine.
+
+    Networks (CNN inference graphs, LM decode steps) are registered with a
+    period and an optional deadline; `compile()` runs the hyperperiod
+    analysis and `admit_*` variants reject a network whose addition would
+    make the taskset unschedulable (the previously-admitted set is kept).
+
+    `run_hyperperiod()` executes one hyperperiod's job sequence in release
+    order: each job runs its registered `step_fn` (e.g. a ServeEngine
+    decode or a compiled CNN forward) and its wall time is checked against
+    the network's WCET response bound scaled by the measured machine-speed
+    ratio — the same enforcement scheme as `PredictableEngine`, lifted to
+    many models.
+    """
+
+    def __init__(self, hw: HardwareModel = TPU_V5E,
+                 num_cores: int | None = None,
+                 arbitration: str = "static"):
+        self.hw = hw
+        self.num_cores = num_cores
+        self.arbitration = arbitration
+        self.specs: list[NetworkSpec] = []
+        self.step_fns: dict[str, Callable[[], object] | None] = {}
+        self.report: TasksetReport | None = None
+        self.compiled: CompiledTaskset | None = None
+        self.deadline_misses: dict[str, int] = {}
+        self.deadline_checks: dict[str, int] = {}
+        self._speed_ratio: float | None = None
+
+    # -- registration --------------------------------------------------------
+    def add_graph(self, name: str, graph: Graph, period_s: float,
+                  deadline_s: float | None = None,
+                  step_fn: Callable[[], object] | None = None) -> None:
+        """Register a network without (re)compiling."""
+        self.specs.append(NetworkSpec(name, graph, period_s, deadline_s))
+        self.step_fns[name] = step_fn
+        self.report = None                      # invalidate stale analysis
+
+    def add_model(self, name: str, cfg: ModelConfig, period_s: float,
+                  batch: int = 1, cache_len: int = 256,
+                  max_layers: int | None = 4,
+                  deadline_s: float | None = None,
+                  step_fn: Callable[[], object] | None = None) -> None:
+        """Register one decode step of an LM architecture as a periodic job.
+
+        max_layers truncates very deep stacks for tractable schedule
+        construction (the analyzed job is the truncated decode step; pass
+        None to analyze the full depth)."""
+        L = (min(cfg.num_layers, max_layers) if max_layers is not None
+             else cfg.num_layers)
+        g = lm_decode_graph(cfg, batch, cache_len, layers=L)
+        self.add_graph(name, g, period_s, deadline_s, step_fn)
+
+    # -- admission control ---------------------------------------------------
+    def compile(self) -> TasksetReport:
+        """Hyperperiod analysis of the currently registered taskset."""
+        if not self.specs:
+            raise AdmissionError("no networks registered")
+        self.report, self.compiled = analyze_taskset(
+            self.specs, self.hw, self.num_cores,
+            arbitration=self.arbitration)
+        return self.report
+
+    def admit_graph(self, name: str, graph: Graph, period_s: float,
+                    deadline_s: float | None = None,
+                    step_fn: Callable[[], object] | None = None) -> bool:
+        """Add the network only if the extended taskset stays schedulable.
+
+        On rejection — or on any compile error (duplicate name, graph that
+        doesn't partition, ...) — the previously admitted set and its
+        analysis are restored untouched."""
+        prev = (list(self.specs), dict(self.step_fns),
+                self.report, self.compiled)
+        self.add_graph(name, graph, period_s, deadline_s, step_fn)
+        try:
+            report = self.compile()
+        except Exception:
+            self.specs, self.step_fns, self.report, self.compiled = prev
+            raise
+        if not report.schedulable:
+            self.specs, self.step_fns, self.report, self.compiled = prev
+            return False
+        return True
+
+    # -- execution -----------------------------------------------------------
+    def run_hyperperiod(self, speed_ratio: float | None = None,
+                        slack_factor: float = 1.5) -> dict:
+        """Execute one hyperperiod of jobs in release order with deadline
+        accounting. Returns per-network miss/check counters.
+
+        The machine-speed ratio is calibrated on the first job that runs a
+        real step_fn (a no-op placeholder must not set the budget scale);
+        jobs without a step_fn are executed for ordering but not checked."""
+        if self.report is None:
+            self.compile()
+        bounds = {n.name: n.response_bound_s for n in self.report.networks}
+        self._speed_ratio = speed_ratio
+        for job in self.compiled.jobs:
+            fn = self.step_fns.get(job.network)
+            t0 = time.perf_counter()
+            if fn is not None:
+                fn()
+            dt = time.perf_counter() - t0
+            if fn is None:
+                continue
+            if self._speed_ratio is None:
+                self._speed_ratio = dt / max(bounds[job.network], 1e-12)
+            budget = bounds[job.network] * self._speed_ratio * slack_factor
+            self.deadline_checks[job.network] = \
+                self.deadline_checks.get(job.network, 0) + 1
+            if dt > budget:
+                self.deadline_misses[job.network] = \
+                    self.deadline_misses.get(job.network, 0) + 1
+        return {"misses": dict(self.deadline_misses),
+                "checks": dict(self.deadline_checks),
+                "speed_ratio": self._speed_ratio}

@@ -3,8 +3,13 @@ output with no overlap, streamed chunks cover K, and transfer byte
 accounting is conservative (DRAM bytes <= scratchpad-duplicated bytes for
 conv — the paper's duplication-only-in-scratchpad rule)."""
 
-import hypothesis.strategies as st
-from hypothesis import HealthCheck, given, settings
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+
+import hypothesis.strategies as st          # noqa: E402
+from hypothesis import HealthCheck, given, settings  # noqa: E402
 
 from repro.core.graph import Graph, conv2d, linear
 from repro.core.partition import Partitioner

@@ -14,8 +14,13 @@
 
 from __future__ import annotations
 
-import hypothesis.strategies as st
-from hypothesis import HealthCheck, given, settings
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+
+import hypothesis.strategies as st          # noqa: E402
+from hypothesis import HealthCheck, given, settings  # noqa: E402
 
 from repro.core.cnn import small_cnn
 from repro.core.graph import Graph, OpNode, eltwise, linear, requant

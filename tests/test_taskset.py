@@ -1,0 +1,212 @@
+"""Multi-network hyperperiod scheduler tests.
+
+Deterministic smoke tests always run; the property tests (random tasksets)
+require hypothesis and skip cleanly without it.
+
+Properties checked (taskset-level versions of P1-P4 in
+test_schedule_properties.py):
+
+  T1  exact hyperperiod (rational lcm of the periods);
+  T2  single DMA channel never double-booked across networks/jobs;
+  T3  per-network topological order preserved within every job;
+  T4  nothing (transfer or compute) happens before its job's release;
+  T5  taskset compositionality — replaying the hyperperiod program with
+      actual times <= WCET never increases any network's response bound;
+  T6  schedulability verdict: a comfortable taskset is SCHEDULABLE, an
+      impossible deadline is not.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.core.cnn import small_cnn
+from repro.core.graph import Graph, linear, requant
+from repro.core.schedule import validate_schedule
+from repro.core.taskset import (NetworkSpec, TasksetError, compile_taskset,
+                                hyperperiod, schedule_taskset)
+from repro.core.wcet import analyze_taskset
+from repro.hw import scaled_paper_machine
+
+
+def mlp(name: str, rows: int = 4, width: int = 128, depth: int = 3) -> Graph:
+    g = Graph(name)
+    g.add_tensor("input", (rows, width), "int8", is_input=True)
+    x = "input"
+    for i in range(depth):
+        x = linear(g, f"fc{i}", x, width)
+        x = requant(g, f"rq{i}", x)
+    g.mark_output(x)
+    g.validate()
+    return g
+
+
+def three_network_specs():
+    return [
+        NetworkSpec("detector", small_cnn(32, 32), 1 / 30),
+        NetworkSpec("lane", mlp("lane"), 1 / 100),
+        NetworkSpec("speech", mlp("speech", rows=8, width=256, depth=4),
+                    1 / 10),
+    ]
+
+
+# -- T1: hyperperiod ---------------------------------------------------------
+
+def test_hyperperiod_exact_lcm():
+    assert hyperperiod([1 / 30, 1 / 100, 1 / 10]) == pytest.approx(0.1)
+    assert hyperperiod([0.02, 0.05]) == pytest.approx(0.1)
+    assert hyperperiod([0.25]) == pytest.approx(0.25)
+    assert hyperperiod([1 / 3, 1 / 7]) == pytest.approx(1.0)
+
+
+def test_hyperperiod_rejects_nonpositive():
+    with pytest.raises(TasksetError):
+        hyperperiod([0.1, 0.0])
+
+
+def test_duplicate_names_rejected():
+    hw = scaled_paper_machine(2)
+    g = mlp("a")
+    with pytest.raises(TasksetError):
+        compile_taskset([NetworkSpec("x", g, 0.1),
+                         NetworkSpec("x", g, 0.2)], hw)
+
+
+# -- T2-T4 + verdict on a 3-network taskset ----------------------------------
+
+def test_analyze_taskset_three_networks():
+    hw = scaled_paper_machine(8)
+    report, compiled = analyze_taskset(three_network_specs(), hw,
+                                       num_cores=8)
+
+    assert report.hyperperiod_s == pytest.approx(0.1)
+    assert [n.n_jobs for n in report.networks] == [3, 10, 1]
+    assert report.total_jobs == 14
+    for n in report.networks:
+        assert n.response_bound_s > 0
+    assert report.schedulable          # comfortable rates on 8 cores
+
+    sched = compiled.schedule
+    # T2: single DMA channel never double-booked (across ALL networks)
+    slots = sorted(sched.dma, key=lambda s: (s.start, s.end))
+    for a, b in zip(slots, slots[1:]):
+        assert b.start >= a.end - 1e-9, f"DMA overlap: {a} / {b}"
+
+    # T3: per-network topological order — deps computed before dependents
+    end = {s.sid: s.end for s in sched.compute}
+    start = {s.sid: s.start for s in sched.compute}
+    for st in compiled.subtasks:
+        for d in st.deps:
+            assert start[st.sid] >= end[d] - 1e-9
+
+    # T4: releases respected for every transfer and compute slot
+    for s in sched.dma:
+        assert s.start >= compiled.release[s.sid] - 1e-9
+    for s in sched.compute:
+        assert s.start >= compiled.release[s.sid] - 1e-9
+
+    # each job finishes after its release, and finish == response + release
+    for job in compiled.jobs:
+        assert job.finish > job.release
+        assert job.response == pytest.approx(job.finish - job.release)
+
+
+# -- T5: taskset compositionality --------------------------------------------
+
+def test_replay_never_exceeds_response_bounds():
+    hw = scaled_paper_machine(4)
+    specs = three_network_specs()
+    report, compiled = analyze_taskset(specs, hw, num_cores=4)
+    bounds = {n.name: n.response_bound_s for n in report.networks}
+    for scale in (1.0, 0.71, 0.33):
+        sched = schedule_taskset(compiled, hw, wcet=False, time_scale=scale)
+        validate_schedule(sched, compiled.subtasks, compiled.mapping,
+                          release=compiled.release)
+        for spec in specs:
+            assert (compiled.response_bound(spec.name)
+                    <= bounds[spec.name] * (1 + 1e-9))
+
+
+# -- T6: schedulability verdicts ---------------------------------------------
+
+def test_impossible_deadline_not_schedulable():
+    hw = scaled_paper_machine(2)
+    specs = [NetworkSpec("det", small_cnn(32, 32), 1 / 30,
+                         deadline_s=1e-9)]
+    report, _ = analyze_taskset(specs, hw, num_cores=2)
+    assert not report.networks[0].schedulable
+    assert not report.schedulable
+
+
+def test_hyperperiod_overrun_not_schedulable():
+    hw = scaled_paper_machine(2)
+    # 10 kHz period: the job cannot drain inside its own period
+    report, _ = analyze_taskset(
+        [NetworkSpec("det", small_cnn(64, 64), 1e-4)], hw, num_cores=2)
+    assert not report.fits_hyperperiod
+    assert not report.schedulable
+
+
+def test_single_network_taskset_matches_single_analysis():
+    """A 1-network taskset released once degenerates to the plain pipeline:
+    the response bound equals the single-network WCET makespan."""
+    from repro.core.wcet import analyze
+    hw = scaled_paper_machine(4)
+    g = small_cnn(32, 32)
+    rep_single, *_ = analyze(g, hw, num_cores=4)
+    report, _ = analyze_taskset([NetworkSpec("net", g, 1.0)], hw,
+                                num_cores=4)
+    assert (report.networks[0].response_bound_s
+            == pytest.approx(rep_single.wcet_total_s, rel=1e-9))
+
+
+# -- property tests (hypothesis; the deterministic tests above must keep
+#    running without it, so guard instead of module-level importorskip) ------
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import HealthCheck, given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    PERIODS = [1 / 100, 1 / 50, 1 / 30, 1 / 10]
+
+    @st.composite
+    def random_taskset(draw):
+        n_nets = draw(st.integers(1, 3))
+        specs = []
+        for i in range(n_nets):
+            rows = draw(st.sampled_from([1, 4, 8]))
+            width = draw(st.sampled_from([32, 64, 128]))
+            depth = draw(st.integers(1, 3))
+            specs.append(NetworkSpec(f"net{i}",
+                                     mlp(f"net{i}", rows, width, depth),
+                                     draw(st.sampled_from(PERIODS))))
+        return specs
+
+    @settings(max_examples=15, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(specs=random_taskset(), cores=st.sampled_from([1, 2, 4]))
+    def test_taskset_invariants_random(specs, cores):
+        hw = scaled_paper_machine(cores)
+        report, compiled = analyze_taskset(specs, hw, num_cores=cores)
+        sched = compiled.schedule
+
+        # T2: exclusive DMA channel across the merged timeline
+        slots = sorted(sched.dma, key=lambda s: (s.start, s.end))
+        for a, b in zip(slots, slots[1:]):
+            assert b.start >= a.end - 1e-9
+
+        # T3/T4 via the validator (deps, per-core order, loads, releases)
+        validate_schedule(sched, compiled.subtasks, compiled.mapping,
+                          release=compiled.release)
+
+        # T5: replay at any speed <= WCET keeps every response within bounds
+        bounds = {n.name: n.response_bound_s for n in report.networks}
+        for scale in (1.0, 0.5):
+            schedule_taskset(compiled, hw, wcet=False, time_scale=scale)
+            for spec in specs:
+                assert (compiled.response_bound(spec.name)
+                        <= bounds[spec.name] * (1 + 1e-9))

@@ -1,0 +1,157 @@
+"""Executor benchmark: seed interpreter vs compiled schedule executor.
+
+Per CNN preset (smallest -> largest) this measures, on one machine model:
+
+  * ``interp_seed``  — seed-equivalent replay: per-call setup (sort + dict
+    resolution) + loop im2col, fresh every call;
+  * ``interp``       — the retained oracle with hoisted setup
+    (`ScheduleReplayer`, vectorized im2col);
+  * ``compiled_np``  — `repro.core.compiled.run_numpy` (fused per-op tile
+    batches, exact BLAS GEMM);
+  * ``compiled_jax`` — the jitted+vmapped program, reported per-sample at
+    batch 1 and batch 8 (compile time excluded; that's the cached cost).
+
+Every path is checked bit-exact against ``reference_forward`` before being
+timed. Results go to stdout (table), the harness CSV, and a JSON artifact
+(``BENCH_executor.json`` — CI uploads it; see docs/performance.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import (analyze, cnn, init_params, jit_batched,
+                        lower_program, reference_forward, run_numpy)
+from repro.core.executor import (ScheduleReplayer,
+                                 _execute_schedule_unprepared)
+from repro.hw import scaled_paper_machine
+
+# name -> (graph factory, input hw shape); ordered smallest -> largest
+PRESETS = {
+    "small_cnn_32": (lambda: cnn.small_cnn(), (32, 32, 3)),
+    "resnet50_64_w025": (lambda: cnn.resnet50(
+        h=64, w=64, width=0.25, blocks=(1, 1, 1, 1), num_classes=16),
+        (64, 64, 3)),
+    "yolov5s_128_w025": (lambda: cnn.yolov5s_backbone(
+        h=128, w=128, width=0.25), (128, 128, 3)),
+    "resnet50_160_full": (lambda: cnn.resnet50(h=160, w=160),
+                          (160, 160, 3)),
+}
+SMOKE = ("small_cnn_32", "resnet50_64_w025")
+CORES = 16
+BATCH = 8
+
+
+def _time(fn, reps):
+    fn()                                   # warmup (jit compile / caches)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    try:
+        import jax
+        jax.block_until_ready(out)
+    except (ImportError, TypeError):
+        pass
+    return (time.perf_counter() - t0) / reps
+
+
+def _bench_preset(name: str, reps: int) -> dict:
+    build, shape = PRESETS[name]
+    g = build()
+    hw = scaled_paper_machine(CORES)
+    rep, sched, subtasks, mapping = analyze(g, hw, num_cores=CORES,
+                                            validate=False)
+    params = init_params(g)
+    rng = np.random.default_rng(0)
+    x = rng.integers(-64, 64, size=shape).astype(np.int8)
+    xb = rng.integers(-64, 64, size=(BATCH,) + shape).astype(np.int8)
+    ref = reference_forward(g, params, {"input": x})
+
+    prog = lower_program(g, params, subtasks, mapping, sched)
+    replayer = ScheduleReplayer(g, subtasks, mapping, sched)
+    jfn = jit_batched(prog)
+
+    # correctness first: every timed path is bit-exact vs the oracle
+    for out in (replayer.run(params, {"input": x}),
+                run_numpy(prog, {"input": x})):
+        for t in g.outputs:
+            assert np.array_equal(ref[t], out[t]), f"{name}: not bit-exact"
+    jout = jfn({"input": np.asarray(x)[None]})
+    for t in g.outputs:
+        assert np.array_equal(ref[t], np.asarray(jout[t])[0]), \
+            f"{name}: jax not bit-exact"
+
+    import jax.numpy as jnp
+    x1j, xbj = jnp.asarray(x[None]), jnp.asarray(xb)
+    times = {
+        "interp_seed": _time(lambda: _execute_schedule_unprepared(
+            g, params, {"input": x}, subtasks, mapping, sched), reps),
+        "interp": _time(lambda: replayer.run(params, {"input": x}), reps),
+        "compiled_np": _time(lambda: run_numpy(prog, {"input": x}), reps),
+        "compiled_jax_b1": _time(lambda: jfn({"input": x1j}), reps),
+    }
+    times["compiled_jax_b8_per_sample"] = _time(
+        lambda: jfn({"input": xbj}), reps) / BATCH
+    return {
+        "preset": name, "cores": CORES, "subtasks": len(subtasks),
+        "ops": len(g.ops), "times_s": times,
+        "speedup_np_vs_seed": times["interp_seed"] / times["compiled_np"],
+        "speedup_jax_b8_vs_seed": (times["interp_seed"]
+                                   / times["compiled_jax_b8_per_sample"]),
+    }
+
+
+def run(csv_rows: list, smoke: bool = False,
+        json_path: str | None = "BENCH_executor.json") -> list[dict]:
+    names = SMOKE if smoke else tuple(PRESETS)
+    reps = 2 if smoke else 3
+    print("\n== Schedule executor: interpreter vs compiled "
+          f"(x{CORES} cores, batch {BATCH}) ==")
+    print(f"{'preset':<20}{'subtasks':>9}{'seed_ms':>9}{'interp_ms':>10}"
+          f"{'np_ms':>8}{'jax_b1':>8}{'jax_b8/s':>9}{'np_speedup':>11}")
+    results = []
+    for name in names:
+        r = _bench_preset(name, reps)
+        t = r["times_s"]
+        print(f"{name:<20}{r['subtasks']:>9}"
+              f"{t['interp_seed'] * 1e3:>9.1f}"
+              f"{t['interp'] * 1e3:>10.1f}"
+              f"{t['compiled_np'] * 1e3:>8.1f}"
+              f"{t['compiled_jax_b1'] * 1e3:>8.1f}"
+              f"{t['compiled_jax_b8_per_sample'] * 1e3:>9.2f}"
+              f"{r['speedup_np_vs_seed']:>10.1f}x")
+        for k, v in t.items():
+            csv_rows.append((f"executor/{name}/{k}", v * 1e6,
+                             f"speedup_np={r['speedup_np_vs_seed']:.1f}"))
+        results.append(r)
+    largest = results[-1]
+    print(f"  largest preset ({largest['preset']}): compiled numpy is "
+          f"{largest['speedup_np_vs_seed']:.1f}x the seed interpreter")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"cores": CORES, "batch": BATCH, "smoke": smoke,
+                       "presets": results}, f, indent=2)
+        print(f"  wrote {json_path}")
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small presets only (CI)")
+    ap.add_argument("--json", default="BENCH_executor.json",
+                    help="artifact path ('' disables)")
+    args = ap.parse_args(argv)
+    csv_rows: list = []
+    run(csv_rows, smoke=args.smoke, json_path=args.json or None)
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

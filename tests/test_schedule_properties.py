@@ -108,6 +108,28 @@ def test_static_beats_tdma(g, hw):
     assert static.makespan <= tdma.makespan * 1.05
 
 
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(g=random_graph(), hw=machine(),
+       mapper=st.sampled_from(["affinity", "rr"]),
+       wcet=st.booleans())
+def test_eventq_engine_identical_to_rescan(g, hw, mapper, wcet):
+    """P7: the O(log n) event-queue scheduler is slot-for-slot identical to
+    the seed rescan formulation — same DMA timeline, same compute slots,
+    same makespan and byte accounting — on random graphs and machines."""
+    part = Partitioner(hw)
+    subtasks = part.partition(g)
+    mfun = map_reverse_affinity if mapper == "affinity" else map_round_robin
+    mapping = mfun(subtasks, hw)
+    a = compute_schedule(subtasks, mapping, hw, wcet=wcet, engine="rescan")
+    b = compute_schedule(subtasks, mapping, hw, wcet=wcet, engine="eventq")
+    assert a.makespan == b.makespan
+    assert a.dma == b.dma
+    assert a.compute == b.compute
+    assert a.bytes_moved == b.bytes_moved
+    assert a.bytes_saved_reuse == b.bytes_saved_reuse
+
+
 def test_small_cnn_schedule():
     hw = scaled_paper_machine(4)
     g = small_cnn()

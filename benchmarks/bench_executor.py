@@ -9,11 +9,17 @@ Per CNN preset (smallest -> largest) this measures, on one machine model:
   * ``compiled_np``  — `repro.core.compiled.run_numpy` (fused per-op tile
     batches, exact BLAS GEMM);
   * ``compiled_jax`` — the jitted+vmapped program, reported per-sample at
-    batch 1 and batch 8 (compile time excluded; that's the cached cost).
+    batch 1 and batch 8 (compile time excluded; that's the cached cost);
+  * ``compiled_pallas`` — the Pallas kernel backend (`run_pallas`): real
+    Mosaic kernels on TPU, interpret mode on CPU CI (where its numbers
+    measure the XLA lowering of the kernel grid, not kernel-grade speed).
 
 Every path is checked bit-exact against ``reference_forward`` before being
-timed. Results go to stdout (table), the harness CSV, and a JSON artifact
-(``BENCH_executor.json`` — CI uploads it; see docs/performance.md).
+timed; a mismatch raises ``BackendMismatch`` (which `benchmarks.run`
+treats as immediately fatal). Results go to stdout (table), the harness
+CSV, and a JSON artifact (``BENCH_executor.json`` — CI uploads it and
+gates on it via ``benchmarks/check_regression.py``; see
+docs/performance.md).
 """
 
 from __future__ import annotations
@@ -25,10 +31,15 @@ import time
 import numpy as np
 
 from repro.core import (analyze, cnn, init_params, jit_batched,
-                        lower_program, reference_forward, run_numpy)
+                        lower_program, reference_forward, run_numpy,
+                        run_pallas)
 from repro.core.executor import (ScheduleReplayer,
                                  _execute_schedule_unprepared)
 from repro.hw import scaled_paper_machine
+
+
+class BackendMismatch(AssertionError):
+    """A timed backend produced values that differ from the oracle."""
 
 # name -> (graph factory, input hw shape); ordered smallest -> largest
 PRESETS = {
@@ -71,19 +82,22 @@ def _bench_preset(name: str, reps: int) -> dict:
     xb = rng.integers(-64, 64, size=(BATCH,) + shape).astype(np.int8)
     ref = reference_forward(g, params, {"input": x})
 
-    prog = lower_program(g, params, subtasks, mapping, sched)
+    prog = lower_program(g, params, subtasks, mapping, sched, hw=hw)
     replayer = ScheduleReplayer(g, subtasks, mapping, sched)
     jfn = jit_batched(prog)
 
     # correctness first: every timed path is bit-exact vs the oracle
-    for out in (replayer.run(params, {"input": x}),
-                run_numpy(prog, {"input": x})):
+    for backend, out in (("interp", replayer.run(params, {"input": x})),
+                         ("numpy", run_numpy(prog, {"input": x})),
+                         ("pallas", run_pallas(prog, {"input": x}))):
         for t in g.outputs:
-            assert np.array_equal(ref[t], out[t]), f"{name}: not bit-exact"
+            if not np.array_equal(ref[t], out[t]):
+                raise BackendMismatch(
+                    f"{name}: {backend} backend not bit-exact on {t}")
     jout = jfn({"input": np.asarray(x)[None]})
     for t in g.outputs:
-        assert np.array_equal(ref[t], np.asarray(jout[t])[0]), \
-            f"{name}: jax not bit-exact"
+        if not np.array_equal(ref[t], np.asarray(jout[t])[0]):
+            raise BackendMismatch(f"{name}: jax backend not bit-exact on {t}")
 
     import jax.numpy as jnp
     x1j, xbj = jnp.asarray(x[None]), jnp.asarray(xb)
@@ -93,15 +107,20 @@ def _bench_preset(name: str, reps: int) -> dict:
         "interp": _time(lambda: replayer.run(params, {"input": x}), reps),
         "compiled_np": _time(lambda: run_numpy(prog, {"input": x}), reps),
         "compiled_jax_b1": _time(lambda: jfn({"input": x1j}), reps),
+        "compiled_pallas": _time(
+            lambda: run_pallas(prog, {"input": x}), reps),
     }
     times["compiled_jax_b8_per_sample"] = _time(
         lambda: jfn({"input": xbj}), reps) / BATCH
     return {
         "preset": name, "cores": CORES, "subtasks": len(subtasks),
         "ops": len(g.ops), "times_s": times,
+        "backends": ["numpy", "jax", "pallas"],
         "speedup_np_vs_seed": times["interp_seed"] / times["compiled_np"],
         "speedup_jax_b8_vs_seed": (times["interp_seed"]
                                    / times["compiled_jax_b8_per_sample"]),
+        "speedup_pallas_vs_seed": (times["interp_seed"]
+                                   / times["compiled_pallas"]),
     }
 
 
@@ -112,7 +131,8 @@ def run(csv_rows: list, smoke: bool = False,
     print("\n== Schedule executor: interpreter vs compiled "
           f"(x{CORES} cores, batch {BATCH}) ==")
     print(f"{'preset':<20}{'subtasks':>9}{'seed_ms':>9}{'interp_ms':>10}"
-          f"{'np_ms':>8}{'jax_b1':>8}{'jax_b8/s':>9}{'np_speedup':>11}")
+          f"{'np_ms':>8}{'jax_b1':>8}{'jax_b8/s':>9}{'pallas':>8}"
+          f"{'np_speedup':>11}")
     results = []
     for name in names:
         r = _bench_preset(name, reps)
@@ -123,6 +143,7 @@ def run(csv_rows: list, smoke: bool = False,
               f"{t['compiled_np'] * 1e3:>8.1f}"
               f"{t['compiled_jax_b1'] * 1e3:>8.1f}"
               f"{t['compiled_jax_b8_per_sample'] * 1e3:>9.2f}"
+              f"{t['compiled_pallas'] * 1e3:>8.1f}"
               f"{r['speedup_np_vs_seed']:>10.1f}x")
         for k, v in t.items():
             csv_rows.append((f"executor/{name}/{k}", v * 1e6,

@@ -1,0 +1,89 @@
+"""CI perf-regression gate for the compiled schedule executor.
+
+Compares a fresh ``BENCH_executor.json`` (written by
+``benchmarks.bench_executor``) against the committed baseline
+``benchmarks/baseline_executor.json`` and fails (exit 1) if any gated
+compiled-backend speedup drops below ``threshold`` x its baseline value.
+
+The gated metrics are *speedups over the seed interpreter measured in the
+same process* — a ratio of two timings on the same machine — so they are
+robust to CI runner speed differences; only a real relative regression of
+the compiled paths trips the gate. To accept an intentional change, rerun
+the smoke benchmark and commit the new baseline:
+
+    PYTHONPATH=src python -m benchmarks.bench_executor --smoke \
+        --json benchmarks/baseline_executor.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# speedup keys gated per preset. compiled_pallas is reported in the JSON
+# but NOT gated: on CPU CI it runs in Pallas interpret mode, whose timing
+# characterizes the XLA fallback lowering rather than the kernels.
+GATED_KEYS = ("speedup_np_vs_seed", "speedup_jax_b8_vs_seed")
+
+
+def check(current: dict, baseline: dict, threshold: float = 0.7):
+    """Return (ok, rows); rows are (preset, key, base, cur, floor, ok)."""
+    cur_by_preset = {r["preset"]: r for r in current.get("presets", [])}
+    rows = []
+    ok = True
+    for base_row in baseline.get("presets", []):
+        preset = base_row["preset"]
+        cur_row = cur_by_preset.get(preset)
+        for key in GATED_KEYS:
+            base = float(base_row[key])
+            floor = threshold * base
+            if cur_row is None:
+                rows.append((preset, key, base, None, floor, False))
+                ok = False
+                continue
+            cur = float(cur_row[key])
+            row_ok = cur >= floor
+            rows.append((preset, key, base, cur, floor, row_ok))
+            ok = ok and row_ok
+    return ok, rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", default="BENCH_executor.json")
+    ap.add_argument("--baseline", default="benchmarks/baseline_executor.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.7,
+        help="fail if current speedup < threshold * baseline (default 0.7)",
+    )
+    args = ap.parse_args(argv)
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    ok, rows = check(current, baseline, args.threshold)
+    print(f"{'preset':<20}{'metric':<26}{'baseline':>9}{'floor':>8}"
+          f"{'current':>9}  verdict")
+    for preset, key, base, cur, floor, row_ok in rows:
+        cur_s = "MISSING" if cur is None else f"{cur:8.1f}x"
+        print(
+            f"{preset:<20}{key:<26}{base:8.1f}x{floor:7.1f}x{cur_s:>9}  "
+            f"{'ok' if row_ok else 'REGRESSION'}"
+        )
+    if not ok:
+        print(
+            "perf gate FAILED: compiled-executor speedup regressed below "
+            f"{args.threshold}x baseline (see rows above); if intentional, "
+            "update benchmarks/baseline_executor.json",
+            file=sys.stderr,
+        )
+        return 1
+    print("perf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

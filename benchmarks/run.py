@@ -5,14 +5,19 @@
   bench_schedule  scheduler-construction eventq-vs-rescan timing + the
                   cores x VLEN x scratchpad design-space sweep (paper §V)
   bench_taskset   multi-network hyperperiod scheduling sweep (#nets x cores)
-  bench_executor  interpreter vs compiled schedule executor (numpy + jitted
-                  batched JAX); emits BENCH_executor.json
+  bench_executor  interpreter vs compiled schedule executor (numpy, jitted
+                  batched JAX, Pallas kernels); emits BENCH_executor.json
   bench_kernels   worker-core kernels (int8 GEMM / conv-im2col; §IV.A)
   bench_serving   per-token WCET for the assigned LM archs + engine
   roofline        §Roofline table from the multi-pod dry-run artifacts
 
-``--smoke`` runs a fast subset (taskset smoke sweep only) suitable for CI;
-the executor smoke benchmark runs as its own CI step (see perf-smoke job).
+``--smoke`` runs a fast subset (taskset sweep + executor backends) suitable
+for CI; the perf-smoke CI job additionally runs the executor benchmark as
+its own step to own the BENCH_executor.json artifact and the perf gate.
+
+A backend-vs-oracle mismatch (``bench_executor.BackendMismatch`` or any
+AssertionError) aborts the whole run immediately with a non-zero exit;
+other section failures are reported at the end.
 
 Prints ``name,us_per_call,derived`` CSV at the end (harness contract).
 """
@@ -29,11 +34,12 @@ def main(argv: list[str] | None = None) -> None:
     csv_rows: list[tuple] = []
     from . import bench_executor, bench_taskset
     if smoke:
-        # executor smoke is NOT repeated here: CI's perf-smoke job runs
-        # `-m benchmarks.bench_executor --smoke` as its own step (it owns
-        # the BENCH_executor.json artifact)
+        # the executor section owns BENCH_executor.json: CI's perf-smoke
+        # job runs this once, then gates the artifact with
+        # benchmarks/check_regression.py (no separate bench_executor step)
         sections = [
             ("taskset", lambda: bench_taskset.run(csv_rows, smoke=True)),
+            ("executor", lambda: bench_executor.run(csv_rows, smoke=True)),
         ]
     else:
         from . import bench_wcet, bench_schedule, bench_kernels, \
@@ -52,6 +58,13 @@ def main(argv: list[str] | None = None) -> None:
     for name, fn in sections:
         try:
             fn()
+        except bench_executor.BackendMismatch:
+            # a backend producing wrong values is never "just" a failed
+            # section — abort the run immediately
+            traceback.print_exc()
+            print(f"FATAL: backend mismatch in section {name}",
+                  file=sys.stderr)
+            sys.exit(1)
         except Exception:  # noqa: BLE001 — report all sections
             failed.append(name)
             traceback.print_exc()

@@ -21,7 +21,8 @@ from .executor import (reference_forward, execute_schedule, init_params,
                        ScheduleReplayer, im2col, im2col_reference)
 from .compiled import (CompiledProgram, CompileError, compile_graph,
                        graph_signature, jit_batched, lower_program,
-                       run_numpy, run_jax, supports_graph)
+                       pallas_batched, run_numpy, run_jax, run_pallas,
+                       supports_graph)
 from . import cnn, quantize
 
 __all__ = [
@@ -35,6 +36,7 @@ __all__ = [
     "reference_forward", "execute_schedule", "init_params",
     "ScheduleReplayer", "im2col", "im2col_reference",
     "CompiledProgram", "CompileError", "compile_graph", "graph_signature",
-    "jit_batched", "lower_program", "run_numpy", "run_jax", "supports_graph",
+    "jit_batched", "lower_program", "pallas_batched", "run_numpy",
+    "run_jax", "run_pallas", "supports_graph",
     "cnn", "quantize",
 ]

@@ -27,6 +27,16 @@ Backends over the lowered program:
     float32 round-half-even as `quantize.requantize`, and avgpool/gap use
     integer-exact round-half-even division (`kernels.ref.round_half_even_div`)
     so no x64 is needed.
+  * ``run_pallas``  — gemm/conv tile batches lowered onto the package's
+    Pallas kernels (`kernels.gemm_int8`, `kernels.conv2d_im2col`), with a
+    gemm/conv -> requant chain fused into the kernel epilogue whenever the
+    int32 accumulator has no other consumer. BlockSpec tiling is derived
+    from the program's hardware model scratchpad capacity
+    (`hw.derive_gemm_blocks` / `hw.derive_conv_blocks`) so the kernel grid
+    mirrors the SPM streaming the schedule models. Op kinds the kernels
+    don't cover fall back per-op to the JAX backend's lowering. On
+    non-TPU backends the kernels run in Pallas interpret mode
+    (bit-exact, CPU CI); on TPU they are the real Mosaic lowering.
 
 Programs are cached per graph *signature* (structural hash) so serving
 engines compile each distinct network once per process.
@@ -48,8 +58,10 @@ from .partition import Partitioner, Subtask
 from .schedule import StaticSchedule, compute_schedule
 from .executor import (_NP_DT, _avgpool, _maxpool, _requant_np, _sat_add,
                        im2col)
-from ..hw import HardwareModel
+from ..hw import HardwareModel, derive_conv_blocks, derive_gemm_blocks
 from ..kernels import ref as kref
+from ..kernels.conv2d_im2col import conv2d_int8_pallas
+from ..kernels.gemm_int8 import gemm_int8_pallas
 
 _JNP_DT = {"int8": jnp.int8, "uint8": jnp.uint8, "int16": jnp.int16,
            "int32": jnp.int32, "f32": jnp.float32, "bf16": jnp.float32}
@@ -114,9 +126,11 @@ class CompiledProgram:
     weights: dict[int, np.ndarray]          # buffer idx -> baked weight
     batches: list[OpBatch]                  # graph (topological) order
     core_streams: list[list[TileInstr]]
+    hw: HardwareModel | None = None         # SPM model for pallas tiling
     _jax_single: object = dataclasses.field(default=None, repr=False)
     _jax_jit_single: object = dataclasses.field(default=None, repr=False)
     _jax_batched: object = dataclasses.field(default=None, repr=False)
+    _pallas_cache: dict = dataclasses.field(default_factory=dict, repr=False)
 
     @property
     def num_instructions(self) -> int:
@@ -172,7 +186,7 @@ def compile_graph(g: Graph, params: dict, hw: HardwareModel,
     subtasks = part.partition(g)
     mapping = map_reverse_affinity(subtasks, hw, num_cores)
     sched = compute_schedule(subtasks, mapping, hw)
-    prog = lower_program(g, params, subtasks, mapping, sched)
+    prog = lower_program(g, params, subtasks, mapping, sched, hw=hw)
     if use_cache:
         _PROGRAM_CACHE[key] = (params, prog)
         while len(_PROGRAM_CACHE) > _PROGRAM_CACHE_CAP:
@@ -187,11 +201,15 @@ def _op_rows(g: Graph, op) -> int:
 
 
 def lower_program(g: Graph, params: dict, subtasks: list[Subtask],
-                  mapping: Mapping, sched: StaticSchedule) -> CompiledProgram:
-    """Lower one scheduled network into a CompiledProgram."""
+                  mapping: Mapping, sched: StaticSchedule,
+                  hw: HardwareModel | None = None) -> CompiledProgram:
+    """Lower one scheduled network into a CompiledProgram.
+
+    `hw` (optional) records the scratchpad model so the pallas backend can
+    derive its block shapes; without it the kernels use their MXU-aligned
+    defaults."""
     index = {name: i for i, name in enumerate(g.tensors)}
     buffers = [(t.name, t.shape, t.dtype) for t in g.tensors.values()]
-    ops = {op.name: op for op in g.ops}
     op_pos = {op.name: i for i, op in enumerate(g.ops)}
     by_id = {st.sid: st for st in subtasks}
 
@@ -253,7 +271,8 @@ def lower_program(g: Graph, params: dict, subtasks: list[Subtask],
         buffers=buffers, index=index,
         input_idx={t: index[t] for t in g.inputs},
         output_idx={t: index[t] for t in g.outputs},
-        weights=weights, batches=batches, core_streams=core_streams)
+        weights=weights, batches=batches, core_streams=core_streams,
+        hw=hw)
 
 
 # -- numpy backend ------------------------------------------------------------
@@ -438,5 +457,159 @@ def run_jax(prog: CompiledProgram, inputs: dict[str, np.ndarray],
             batched: bool = True) -> dict[str, np.ndarray]:
     """Convenience wrapper: numpy in, numpy out, block until ready."""
     fn = jit_batched(prog) if batched else jit_single(prog)
+    out = fn({k: jnp.asarray(v) for k, v in inputs.items()})
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
+# -- Pallas backend -----------------------------------------------------------
+
+# Op kinds with a Pallas kernel lowering; everything else falls back to the
+# JAX backend's per-op lowering inside the same traced program.
+PALLAS_KINDS = frozenset({"gemm", "conv2d"})
+
+
+@dataclasses.dataclass(frozen=True)
+class _PallasStep:
+    """One op of the pallas-backend program plan.
+
+    mode: "gemm" / "conv2d" (Pallas kernel), "jax" (fallback), or "skip"
+    (a requant batch fused into the preceding kernel's epilogue).
+    """
+
+    mode: str
+    batch: OpBatch
+    out_idx: int                 # where the result lands (fused: requant out)
+    mult: np.ndarray | None      # fused requant multiplier, else None
+    blocks: tuple                # (bm, bn, bk) gemm | (rows_t, bn) conv
+
+
+def _fusable_requant(prog: CompiledProgram, b: OpBatch) -> OpBatch | None:
+    """The requant batch to fold into `b`'s kernel epilogue, if legal.
+
+    Legal iff b's int32 output feeds exactly one consumer, that consumer is
+    a requant op, and the accumulator is not itself a graph output — then
+    requantization in the epilogue is observationally identical to running
+    the requant batch afterwards (`requant_epilogue` shares the oracle's
+    round-half-even numerics).
+    """
+    out_name = prog.buffers[b.out_idx][0]
+    if out_name in prog.graph.outputs:
+        return None
+    consumers = prog.graph.consumers_of(out_name)
+    if len(consumers) != 1 or consumers[0].kind != "requant":
+        return None
+    (rq,) = consumers
+    for cand in prog.batches:
+        if cand.name == rq.name:
+            return cand
+    return None
+
+
+def _pallas_plan(prog: CompiledProgram) -> list[_PallasStep]:
+    """Decide, once per program, how each fused tile batch lowers onto the
+    Pallas kernels: kernel vs fallback, epilogue fusion, and SPM-derived
+    block shapes."""
+    plan: list[_PallasStep] = []
+    skipped: set[int] = set()
+    for b in prog.batches:
+        if b.op_idx in skipped:
+            plan.append(_PallasStep("skip", b, b.out_idx, None, ()))
+            continue
+        if b.kind not in PALLAS_KINDS:
+            plan.append(_PallasStep("jax", b, b.out_idx, None, ()))
+            continue
+        rq = _fusable_requant(prog, b)
+        out_idx = rq.out_idx if rq is not None else b.out_idx
+        mult = rq.mult if rq is not None else None
+        out_bytes = 1 if rq is not None else 4
+        a = b.attrs
+        if b.kind == "gemm":
+            blocks = (derive_gemm_blocks(prog.hw, a["M"], a["K"], a["N"],
+                                         out_bytes)
+                      if prog.hw is not None else (128, 128, 128))
+        else:
+            blocks = (derive_conv_blocks(prog.hw, a, out_bytes)
+                      if prog.hw is not None else (8, 128))
+        if rq is not None:
+            skipped.add(rq.op_idx)
+        plan.append(_PallasStep(b.kind, b, out_idx, mult, blocks))
+    return plan
+
+
+def pallas_single(prog: CompiledProgram, interpret: bool = False):
+    """Single-sample traced function over the Pallas kernels (cached per
+    interpret flag). Same calling convention as `jax_single`; bit-exact
+    against it (and therefore against the interpreter oracle)."""
+    key = ("single", bool(interpret))
+    if key not in prog._pallas_cache:
+        plan = _pallas_plan(prog)
+        weights = {i: jnp.asarray(w) for i, w in prog.weights.items()}
+
+        def single(inputs: dict):
+            vals: list = [None] * len(prog.buffers)
+            for name, i in prog.input_idx.items():
+                vals[i] = inputs[name]
+            for step in plan:
+                b = step.batch
+                if step.mode == "skip":
+                    continue                 # fused into the previous kernel
+                if step.mode == "gemm":
+                    a = b.attrs
+                    bm, bn, bk = step.blocks
+                    x = vals[b.in_idx[0]].reshape(a["M"], a["K"])
+                    out = gemm_int8_pallas(
+                        x, weights[b.w_idx],
+                        None if step.mult is None else jnp.asarray(step.mult),
+                        bm=bm, bn=bn, bk=bk, interpret=interpret)
+                    if step.mult is None:
+                        out = out.astype(
+                            _JNP_DT[prog.buffers[step.out_idx][2]])
+                    vals[step.out_idx] = out
+                elif step.mode == "conv2d":
+                    a = b.attrs
+                    rows_t, bn = step.blocks
+                    vals[step.out_idx] = conv2d_int8_pallas(
+                        vals[b.in_idx[0]], weights[b.w_idx],
+                        None if step.mult is None else jnp.asarray(step.mult),
+                        kh=a["kh"], kw=a["kw"], stride=a["stride"],
+                        padding=a["padding"], rows_t=rows_t, bn=bn,
+                        interpret=interpret)
+                else:
+                    vals[b.out_idx] = _jax_op(b, vals, prog, weights)
+            return {name: vals[i] for name, i in prog.output_idx.items()}
+
+        prog._pallas_cache[key] = single
+    return prog._pallas_cache[key]
+
+
+def jit_pallas_single(prog: CompiledProgram, interpret: bool = False):
+    key = ("jit_single", bool(interpret))
+    if key not in prog._pallas_cache:
+        prog._pallas_cache[key] = jax.jit(pallas_single(prog, interpret))
+    return prog._pallas_cache[key]
+
+
+def pallas_batched(prog: CompiledProgram, interpret: bool | None = None):
+    """The whole pallas-backend program jitted and vmapped over a leading
+    batch axis — the serving step of `BatchedInferenceEngine(backend=
+    "pallas")`. `interpret=None` auto-selects: real Mosaic lowering on TPU,
+    interpret mode elsewhere (Pallas cannot lower to the CPU XLA backend)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    key = ("batched", bool(interpret))
+    if key not in prog._pallas_cache:
+        prog._pallas_cache[key] = jax.jit(
+            jax.vmap(pallas_single(prog, interpret)))
+    return prog._pallas_cache[key]
+
+
+def run_pallas(prog: CompiledProgram, inputs: dict[str, np.ndarray],
+               interpret: bool | None = None) -> dict[str, np.ndarray]:
+    """Convenience wrapper: one unbatched sample through the jitted pallas
+    program; numpy in, numpy out. Returns the graph outputs (like
+    `run_jax`, unlike `run_numpy` which exposes every buffer)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    fn = jit_pallas_single(prog, interpret)
     out = fn({k: jnp.asarray(v) for k, v in inputs.items()})
     return {k: np.asarray(v) for k, v in out.items()}

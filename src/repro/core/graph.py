@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Iterable
 
 DTYPE_BYTES = {
     "int8": 1, "uint8": 1, "int16": 2, "int32": 4,

@@ -43,14 +43,12 @@ def lm_decode_graph(cfg: ModelConfig, batch: int, cache_len: int,
     for i in range(L):
         p = f"l{i}"
         if cfg.family == "ssm":                        # rwkv6 block
-            r = _proj(g, f"{p}.wr", x, D)
+            _proj(g, f"{p}.wr", x, D)
             k = _proj(g, f"{p}.wk", x, D)
-            v = _proj(g, f"{p}.wv", x, D)
-            ge = _proj(g, f"{p}.wg", x, D)
-            wd = _proj(g, f"{p}.wdecay", x, D)
+            _proj(g, f"{p}.wv", x, D)
+            _proj(g, f"{p}.wg", x, D)
+            _proj(g, f"{p}.wdecay", x, D)
             # wkv state update + readout: per head (dk x dv) MAC
-            H = cfg.num_heads if cfg.num_heads > 0 else D // 64
-            dk = D // H
             wkv = linear(g, f"{p}.wkv_update", k, D)   # k^T v outer + read
             wkv = requant(g, f"{p}.wkv_update.rq", wkv)
             o = _proj(g, f"{p}.wo", wkv, D)
@@ -81,8 +79,6 @@ def lm_decode_graph(cfg: ModelConfig, batch: int, cache_len: int,
                              * cfg.capacity_factor) + 1)
             for e in range(cfg.num_experts):
                 pe = f"{p}.e{e}"
-                if e == 0:
-                    xe = x                       # router output routing
                 h1 = linear(g, f"{pe}.wi", _cap_view(g, pe, x, cap, D),
                             cfg.d_ff)
                 h1 = requant(g, f"{pe}.wi.rq", h1)

@@ -40,7 +40,7 @@ from fractions import Fraction
 
 from .graph import Graph
 from .mapping import Mapping, map_reverse_affinity
-from .partition import Partitioner, Subtask, Transfer
+from .partition import Partitioner, Subtask
 from .schedule import StaticSchedule, compute_schedule
 from ..hw import HardwareModel
 

@@ -14,8 +14,6 @@ tested in tests/test_distribution.py with forced host devices.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

@@ -15,7 +15,6 @@ the sequential reference on forced host devices.
 
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -105,6 +105,79 @@ PAPER_RISCV = HardwareModel(
 )
 
 
+# -- scratchpad-derived kernel tiling -----------------------------------------
+#
+# The paper's partitioner sizes GEMM tiles so that x-tile + w-tile + int32
+# accumulator fit in one core's scratchpad; the Pallas backend of the
+# compiled executor (repro.core.compiled.run_pallas) derives its BlockSpec
+# shapes from the same constraint so the kernel grid mirrors the SPM
+# streaming the schedule models. Streamed tiles (activations + weights)
+# are double-buffered on a dual-ported scratchpad — they count twice —
+# while the accumulator and output tile are resident once.
+
+_GEMM_BLOCK_CANDIDATES = (1024, 512, 256, 128, 64, 32, 16, 8)
+_CONV_ROWS_CANDIDATES = (16, 8, 4, 2, 1)
+_CONV_BN_CANDIDATES = (256, 128, 64, 32, 16, 8)
+
+
+def _gemm_tile_bytes(hw: HardwareModel, bm: int, bn: int, bk: int,
+                     out_bytes: int) -> int:
+    stream = bm * bk + bk * bn               # int8 x-tile + w-tile
+    if hw.dual_ported:
+        stream *= 2                          # double-buffered prefetch
+    return stream + bm * bn * 4 + bm * bn * out_bytes
+
+
+def derive_gemm_blocks(hw: HardwareModel, M: int, K: int, N: int,
+                       out_bytes: int = 4) -> tuple[int, int, int]:
+    """(bm, bn, bk) for a tiled int8 GEMM such that the working set fits in
+    one worker's scratchpad (`hw.scratchpad_bytes`).
+
+    Returns the largest square block from a lane-friendly candidate list
+    whose footprint — double-buffered x/w tiles + int32 accumulator + output
+    tile — fits; the kernel wrapper clamps each block to the actual problem
+    dims. `out_bytes` is 1 when requantization is fused into the epilogue
+    (int8 output tile), 4 for a raw int32 output.
+    """
+    for b in _GEMM_BLOCK_CANDIDATES:
+        if _gemm_tile_bytes(hw, b, b, b, out_bytes) <= hw.scratchpad_bytes:
+            return b, b, b
+    return (8, 8, 8)                         # model floor; always correct
+
+
+def derive_conv_blocks(hw: HardwareModel, attrs: dict,
+                       out_bytes: int = 4) -> tuple[int, int]:
+    """(rows_t, bn) for the implicit-im2col conv kernel such that one raw
+    input band (with halo) + weight tile + int32 accumulator fit in SPM.
+
+    `attrs` is a graph conv2d attr dict (H, W, C_in, C_out, kh, kw, stride,
+    padding). Picks the candidate pair with the largest output-tile area
+    that fits; falls back to the smallest candidate (correct regardless —
+    block shapes only affect the streaming decomposition, never numerics).
+    """
+    kh, kw, s = attrs["kh"], attrs["kw"], attrs["stride"]
+    p, c_in = attrs.get("padding", 0), attrs["C_in"]
+    ow = (attrs["W"] + 2 * p - kw) // s + 1
+    wp = (ow - 1) * s + kw                   # padded band width actually read
+    best = None
+    for rows_t in _CONV_ROWS_CANDIDATES:
+        in_rows = (rows_t - 1) * s + kh
+        for bn in _CONV_BN_CANDIDATES:
+            stream = in_rows * wp * c_in + kh * kw * c_in * bn
+            if hw.dual_ported:
+                stream *= 2
+            total = stream + rows_t * ow * bn * (4 + out_bytes)
+            if total <= hw.scratchpad_bytes:
+                # candidates descend: first fit is the largest bn for this
+                # rows_t; the outer loop still compares across rows_t values
+                if best is None or rows_t * ow * bn > best[0]:
+                    best = (rows_t * ow * bn, rows_t, bn)
+                break
+    if best is None:
+        return _CONV_ROWS_CANDIDATES[-1], _CONV_BN_CANDIDATES[-1]
+    return best[1], best[2]
+
+
 def scaled_paper_machine(num_workers: int,
                          scratchpad_bytes: int | None = None,
                          vector_lanes: int | None = None) -> HardwareModel:

@@ -20,12 +20,18 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .gemm_int8 import requant_epilogue
+from .ref import _as_channel_mult
 
-def _make_kernel(kh: int, kw: int, stride: int, rows_t: int, ow: int):
-    def kernel(x_ref, w_ref, o_ref):
+
+def _make_kernel(kh: int, kw: int, stride: int, rows_t: int, ow: int,
+                 requant: bool = False):
+    def kernel(x_ref, w_ref, *refs):
         # x_ref: (1, in_rows_t, Wp, C) int8 raw band (halo included)
         # w_ref: (kh*kw*C, bn) int8
-        # o_ref: (rows_t*ow, bn) int32
+        # [m_ref: (1, bn) f32 requant multiplier, if fused]
+        # o_ref: (rows_t*ow, bn) int32 (int8 if fused requant)
+        o_ref = refs[-1]
         x = x_ref[0]
         C = x.shape[2]
         acc = jnp.zeros((rows_t * ow, o_ref.shape[1]), jnp.int32)
@@ -40,17 +46,29 @@ def _make_kernel(kh: int, kw: int, stride: int, rows_t: int, ow: int):
                 acc = acc + jax.lax.dot_general(
                     patch, wslab, (((1,), (0,)), ((), ())),
                     preferred_element_type=jnp.int32)
-        o_ref[...] = acc
+        if requant:
+            o_ref[...] = requant_epilogue(acc, refs[0][...])
+        else:
+            o_ref[...] = acc
     return kernel
 
 
 @functools.partial(jax.jit, static_argnames=(
     "kh", "kw", "stride", "padding", "rows_t", "bn", "interpret"))
-def conv2d_int8_pallas(x: jax.Array, w: jax.Array, *, kh: int, kw: int,
+def conv2d_int8_pallas(x: jax.Array, w: jax.Array,
+                       requant_mult: jax.Array | None = None,
+                       *, kh: int, kw: int,
                        stride: int = 1, padding: int = 0,
                        rows_t: int = 8, bn: int = 128,
                        interpret: bool = False) -> jax.Array:
-    """x (H,W,C) int8, w (kh*kw*C, N) int8 -> (oh, ow, N) int32."""
+    """x (H,W,C) int8, w (kh*kw*C, N) int8 -> (oh, ow, N) int32.
+
+    With `requant_mult` (scalar or per-channel (N,)) the int32 accumulator
+    is folded to int8 in the kernel epilogue (`requant_epilogue` — the same
+    round-half-even contract as the GEMM kernel and `kernels.ref`), so the
+    int32 tensor never leaves VMEM. Block shapes (rows_t, bn) can be derived
+    from a scratchpad budget with `repro.hw.derive_conv_blocks`.
+    """
     H, W, C = x.shape
     KKC, N = w.shape
     assert KKC == kh * kw * C
@@ -77,17 +95,25 @@ def conv2d_int8_pallas(x: jax.Array, w: jax.Array, *, kh: int, kw: int,
         lambda s: jax.lax.dynamic_slice(
             xp, (s, 0, 0), (in_rows_t, xp.shape[1], C)))(starts)
 
-    kernel = _make_kernel(kh, kw, stride, rows_t, ow)
+    fused = requant_mult is not None
+    kernel = _make_kernel(kh, kw, stride, rows_t, ow, requant=fused)
+    in_specs = [
+        pl.BlockSpec((1, in_rows_t, xp.shape[1], C),
+                     lambda i, j: (i, 0, 0, 0)),
+        pl.BlockSpec((kh * kw * C, bn_), lambda i, j: (0, j)),
+    ]
+    operands = [bands, wp]
+    if fused:
+        mult = _as_channel_mult(requant_mult, N)
+        operands.append(jnp.pad(mult, (0, Np - N)).reshape(1, Np))
+        in_specs.append(pl.BlockSpec((1, bn_), lambda i, j: (0, j)))
     out = pl.pallas_call(
         kernel,
         grid=(oh_p // rows_t, Np // bn_),
-        in_specs=[
-            pl.BlockSpec((1, in_rows_t, xp.shape[1], C),
-                         lambda i, j: (i, 0, 0, 0)),
-            pl.BlockSpec((kh * kw * C, bn_), lambda i, j: (0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((rows_t * ow, bn_), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((oh_p * ow, Np), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct(
+            (oh_p * ow, Np), jnp.int8 if fused else jnp.int32),
         interpret=interpret,
-    )(bands, wp)
+    )(*operands)
     return out[:oh * ow, :N].reshape(oh, ow, N)

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .ref import _as_channel_mult
+
 
 def _gemm_kernel(x_ref, w_ref, o_ref, acc_ref):
     """Grid (Mi, Nj, Kk); K innermost -> acc tile lives across K steps."""
@@ -46,6 +48,20 @@ def _gemm_kernel(x_ref, w_ref, o_ref, acc_ref):
         o_ref[...] = acc_ref[...]
 
 
+def requant_epilogue(acc: jax.Array, mult: jax.Array) -> jax.Array:
+    """int32 accumulator tile -> int8, the repo's single requant definition.
+
+    float32 multiply + round-half-even + saturate. `jnp.round` rounds halves
+    to even, so this is bit-identical to `kernels.ref.gemm_int8`'s requant
+    path, `quantize.requantize`, the executor's `_requant_np` (np.round is
+    also half-even), and the integer-exact `kernels.ref.round_half_even_div`
+    semantics on exact-half quotients. Shared by the GEMM and conv kernels
+    so the fused epilogue can never drift from the oracle.
+    """
+    y = jnp.round(acc.astype(jnp.float32) * mult)
+    return jnp.clip(y, -128, 127).astype(jnp.int8)
+
+
 def _gemm_requant_kernel(x_ref, w_ref, m_ref, o_ref, acc_ref):
     k = pl.program_id(2)
 
@@ -59,8 +75,7 @@ def _gemm_requant_kernel(x_ref, w_ref, m_ref, o_ref, acc_ref):
 
     @pl.when(k == pl.num_programs(2) - 1)
     def _store():
-        y = jnp.round(acc_ref[...].astype(jnp.float32) * m_ref[...])
-        o_ref[...] = jnp.clip(y, -128, 127).astype(jnp.int8)
+        o_ref[...] = requant_epilogue(acc_ref[...], m_ref[...])
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
@@ -71,11 +86,17 @@ def gemm_int8_pallas(x: jax.Array, w: jax.Array,
     """x (M,K) int8 @ w (K,N) int8 -> int32 (or int8 if requant_mult given).
 
     Shapes are padded to block multiples; padding contributes zeros to the
-    accumulator so results are exact.
+    accumulator so results are exact. `requant_mult` may be a scalar or a
+    per-channel (N,) vector (both broadcast, as in `quantize.requantize`).
+    Block shapes can be derived from a scratchpad budget with
+    `repro.hw.derive_gemm_blocks` (the compiled executor's pallas backend
+    does exactly that).
     """
     M, K = x.shape
     K2, N = w.shape
     assert K == K2, (x.shape, w.shape)
+    if requant_mult is not None:
+        requant_mult = _as_channel_mult(requant_mult, N)
     bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
     Mp, Np, Kp = -(-M // bm_) * bm_, -(-N // bn_) * bn_, -(-K // bk_) * bk_
     xp = jnp.pad(x, ((0, Mp - M), (0, Kp - K)))

@@ -48,13 +48,14 @@ def gemm_int8(x, w, requant_mult=None, *, backend: str | None = None,
                             interpret=(b == "interpret"), **blocks)
 
 
-def conv2d_int8(x, w, *, kh, kw, stride=1, padding=0,
+def conv2d_int8(x, w, requant_mult=None, *, kh, kw, stride=1, padding=0,
                 backend: str | None = None, **blocks):
     b = _resolve(backend)
     if b == "ref":
-        return ref.conv2d_int8(x, w, stride=stride, padding=padding)
-    return conv2d_int8_pallas(x, w, kh=kh, kw=kw, stride=stride,
-                              padding=padding,
+        return ref.conv2d_int8(x, w, stride=stride, padding=padding,
+                               requant_mult=requant_mult)
+    return conv2d_int8_pallas(x, w, requant_mult, kh=kh, kw=kw,
+                              stride=stride, padding=padding,
                               interpret=(b == "interpret"), **blocks)
 
 
@@ -87,11 +88,11 @@ def gemm_int8_batched(x, w, requant_mult=None, *,
     return jax.vmap(single)(x)
 
 
-def conv2d_int8_batched(x, w, *, kh, kw, stride=1, padding=0,
-                        backend: str | None = None, **blocks):
+def conv2d_int8_batched(x, w, requant_mult=None, *, kh, kw, stride=1,
+                        padding=0, backend: str | None = None, **blocks):
     """x (B,H,W,C) int8 conv, vmapped over the batch axis."""
     def single(xi):
-        return conv2d_int8(xi, w, kh=kh, kw=kw, stride=stride,
+        return conv2d_int8(xi, w, requant_mult, kh=kh, kw=kw, stride=stride,
                            padding=padding, backend=backend, **blocks)
 
     return jax.vmap(single)(x)

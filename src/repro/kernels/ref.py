@@ -23,8 +23,15 @@ def gemm_int8(x: jax.Array, w: jax.Array,
                               preferred_element_type=jnp.int32)
     if requant_mult is None:
         return acc
-    y = jnp.round(acc.astype(jnp.float32) * requant_mult[None, :])
+    mult = _as_channel_mult(requant_mult, w.shape[1])
+    y = jnp.round(acc.astype(jnp.float32) * mult[None, :])
     return jnp.clip(y, -128, 127).astype(jnp.int8)
+
+
+def _as_channel_mult(mult, n: int) -> jax.Array:
+    """Scalar or (N,) requant multiplier -> (N,) f32 (both are legal
+    everywhere requant appears, mirroring quantize.requantize)."""
+    return jnp.broadcast_to(jnp.asarray(mult, jnp.float32).reshape(-1), (n,))
 
 
 # -- conv2d as implicit-im2col GEMM -------------------------------------------
@@ -75,7 +82,8 @@ def conv2d_int8(x: jax.Array, w: jax.Array, stride: int = 1,
     assert k * k * C == KKC, "weights not (kh*kw*C, N)"
     acc = conv2d_int8_general(x, w, k, k, stride, padding).reshape(-1, N)
     if requant_mult is not None:
-        y = jnp.round(acc.astype(jnp.float32) * requant_mult[None, :])
+        mult = _as_channel_mult(requant_mult, N)
+        y = jnp.round(acc.astype(jnp.float32) * mult[None, :])
         acc = jnp.clip(y, -128, 127).astype(jnp.int8)
     oh = (H + 2 * padding - k) // stride + 1
     ow = (W + 2 * padding - k) // stride + 1

@@ -29,11 +29,10 @@ import traceback
 
 import jax
 
-from ..configs import (ARCH_IDS, SHAPES, cell_applicable, enc_len_for,
-                       get_config, input_specs)
+from ..configs import (ARCH_IDS, SHAPES, cell_applicable, get_config,
+                       input_specs)
 from ..distribution.sharding import (batch_shardings, cache_shardings,
-                                     param_shardings, replicated,
-                                     zero1_shardings)
+                                     param_shardings, zero1_shardings)
 from ..models import decode_step, init_params, prefill_step
 from ..models.config import ModelConfig
 from ..train.optimizer import OptConfig, init_opt_state

@@ -30,7 +30,7 @@ from .attention import (attn_out, decode_attend, decode_attend_int8,
 from .moe import moe_apply
 from .ssm import ssm_apply
 from .rwkv import rwkv_channel_mix, rwkv_time_mix
-from .transformer import (_dense_block, _embed_with_frontend, _maybe_remat,
+from .transformer import (_embed_with_frontend, _maybe_remat,
                           _unembed_weight, encode)
 
 

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from .config import ModelConfig
 from .layers import normal_init
-from ..kernels import ops as kops, ref as kref
+from ..kernels import ref as kref
 
 
 def ssm_init(key, cfg: ModelConfig, dtype):

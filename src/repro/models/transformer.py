@@ -21,7 +21,6 @@ Implementation notes:
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -30,7 +29,7 @@ import jax.numpy as jnp
 from .config import ModelConfig
 from .layers import (embed_apply, embed_init, make_norm, mlp_apply, mlp_init,
                      normal_init)
-from .attention import (attn_init, attn_out, attend, decode_attend, qkv_proj)
+from .attention import (attn_init, attn_out, attend, qkv_proj)
 from .moe import moe_apply, moe_init
 from .ssm import ssm_apply, ssm_init
 from .rwkv import (rwkv_channel_mix, rwkv_init, rwkv_time_mix)

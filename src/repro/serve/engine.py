@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.compiled import compile_graph, jit_batched, run_numpy
+from ..core.compiled import (compile_graph, jit_batched, pallas_batched,
+                             run_numpy)
 from ..core.graph import Graph
 from ..hw import HardwareModel, TPU_V5E
 from ..models.config import ModelConfig
@@ -43,19 +44,26 @@ class BatchedInferenceEngine:
     function vmapped over the batch axis — the paper's static schedule
     turned into a real batched serving step. ``backend="numpy"`` runs the
     vectorized numpy replay per sample instead (no JAX tracing; useful for
-    small batches and as a cross-check — both are bit-exact vs
-    ``reference_forward``).
+    small batches and as a cross-check). ``backend="pallas"`` serves through
+    the Pallas kernel lowering (`repro.core.compiled.pallas_batched`):
+    real Mosaic kernels on TPU, interpret mode elsewhere. All three are
+    bit-exact vs ``reference_forward``.
     """
 
     def __init__(self, graph: Graph, params: dict,
                  hw: HardwareModel = TPU_V5E,
                  num_cores: int | None = None, backend: str = "jax"):
-        assert backend in ("jax", "numpy")
+        assert backend in ("jax", "numpy", "pallas")
         self.graph = graph
         self.params = params
         self.backend = backend
         self.program = compile_graph(graph, params, hw, num_cores)
-        self._fn = jit_batched(self.program) if backend == "jax" else None
+        if backend == "jax":
+            self._fn = jit_batched(self.program)
+        elif backend == "pallas":
+            self._fn = pallas_batched(self.program)
+        else:
+            self._fn = None
         self.metrics = {"batches": 0, "samples": 0}
 
     def infer(self, batch: dict[str, np.ndarray] | np.ndarray
@@ -66,7 +74,7 @@ class BatchedInferenceEngine:
             (name,) = self.graph.inputs
             batch = {name: batch}
         B = next(iter(batch.values())).shape[0]
-        if self.backend == "jax":
+        if self._fn is not None:
             out = self._fn({k: jnp.asarray(v) for k, v in batch.items()})
             res = {k: np.asarray(v) for k, v in out.items()}
         else:

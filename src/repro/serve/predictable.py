@@ -198,10 +198,13 @@ class MultiModelEngine:
         Each network is lowered ONCE through the program cache
         (`repro.core.compiled`) and every hyperperiod job instance of it
         replays the same compiled program — jobs do real inference work at
-        compiled-executor speed instead of running a placeholder. Missing
-        params/inputs are synthesized (`init_params` / random int8 frames).
-        Networks with analysis-only op kinds (LM decode graphs) are left
-        untouched. Returns the per-network engines for inspection.
+        compiled-executor speed instead of running a placeholder.
+        `backend` selects the replay path per engine: "numpy" (default),
+        "jax" (jitted+vmapped), or "pallas" (the Pallas kernel lowering;
+        interpret mode off-TPU). Missing params/inputs are synthesized
+        (`init_params` / random int8 frames). Networks with analysis-only
+        op kinds (LM decode graphs) are left untouched. Returns the
+        per-network engines for inspection.
         """
         from ..core.compiled import supports_graph
         params_by_net = params_by_net or {}

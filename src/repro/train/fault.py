@@ -27,8 +27,6 @@ import dataclasses
 import time
 from typing import Any, Callable
 
-import jax
-
 from .checkpoint import CheckpointManager
 
 

@@ -6,17 +6,16 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable
+from typing import Callable
 
 import jax
-import numpy as np
 
 from ..models.config import ModelConfig
 from ..models.transformer import init_params
 from ..data.pipeline import DataConfig, SyntheticTokens
 from ..distribution.context import with_mesh_context
 from ..distribution.sharding import (batch_shardings, param_shardings,
-                                     zero1_shardings, replicated)
+                                     zero1_shardings)
 from .optimizer import OptConfig, init_opt_state
 from .step import make_train_step
 from .checkpoint import CheckpointManager
@@ -43,7 +42,6 @@ def build_state(cfg: ModelConfig, mesh, zero1: bool = True, seed: int = 0):
         params = jax.jit(lambda k: init_params(cfg, k),
                          out_shardings=p_shard)(key)
         shard_fn = zero1_shardings if zero1 else param_shardings
-        o_specs = jax.eval_shape(init_opt_state, p_specs)
         o_shard = {"mu": shard_fn(cfg, mesh, p_specs),
                    "nu": shard_fn(cfg, mesh, p_specs),
                    "step": jax.sharding.NamedSharding(

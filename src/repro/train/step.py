@@ -13,8 +13,6 @@ scratchpads.
 
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -79,7 +77,6 @@ def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
                                            jnp.arange(microbatches))
             grads = jax.tree.map(lambda g: g / microbatches, gsum)
             loss = lsum / microbatches
-            metrics = {}
 
         params, opt_state, opt_metrics = adamw_update(
             opt_cfg, grads, opt_state, params)

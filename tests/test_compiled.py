@@ -13,7 +13,7 @@ import pytest
 
 from repro.core import (analyze, cnn, compile_graph, execute_schedule,
                         init_params, lower_program, reference_forward,
-                        run_jax, run_numpy)
+                        run_jax, run_numpy, run_pallas)
 from repro.core import compiled as C
 from repro.core.schedule import compute_schedule, validate_schedule
 from repro.core.taskset import NetworkSpec, compile_taskset
@@ -35,27 +35,44 @@ def _compiled(preset, cores=4, seed=1):
     hw = scaled_paper_machine(cores)
     rep, sched, subtasks, mapping = analyze(g, hw, num_cores=cores)
     params = init_params(g, seed=seed)
-    prog = lower_program(g, params, subtasks, mapping, sched)
+    prog = lower_program(g, params, subtasks, mapping, sched, hw=hw)
     return g, shape, params, prog, (subtasks, mapping, sched)
 
 
+# every compiled backend as a uniform single-sample callable
+BACKENDS = {
+    "numpy": lambda prog, x: run_numpy(prog, {"input": x}),
+    "jax": lambda prog, x: {t: v[0] for t, v in
+                            run_jax(prog, {"input": x[None]}).items()},
+    "pallas": lambda prog, x: run_pallas(prog, {"input": x},
+                                         interpret=True),
+}
+
+
+@pytest.mark.parametrize("backend", sorted(BACKENDS))
 @pytest.mark.parametrize("preset", sorted(PRESETS))
-def test_numpy_backend_bit_exact(preset):
+def test_backend_bit_exact(preset, backend):
+    """Every compiled backend (numpy, jitted JAX, Pallas kernels in
+    interpret mode) is bit-exact vs the whole-graph oracle on every CNN
+    preset — the acceptance bar for the pallas lowering."""
     g, shape, params, prog, _ = _compiled(preset)
     x = np.random.default_rng(2).integers(-64, 64, size=shape).astype(np.int8)
     ref = reference_forward(g, params, {"input": x})
-    out = run_numpy(prog, {"input": x})
+    out = BACKENDS[backend](prog, x)
     for t in g.outputs:
         assert np.array_equal(ref[t], out[t])
 
 
-@pytest.mark.parametrize("preset", sorted(PRESETS))
-def test_numpy_backend_matches_interpreter(preset):
-    g, shape, params, prog, (subtasks, mapping, sched) = _compiled(preset)
+@pytest.mark.parametrize("backend", sorted(BACKENDS))
+def test_backend_matches_interpreter(backend):
+    """Compiled backends match the tile-by-tile schedule interpreter (the
+    correctness proof chain: interpreter == oracle == compiled)."""
+    g, shape, params, prog, (subtasks, mapping, sched) = _compiled(
+        "small_cnn")
     x = np.random.default_rng(3).integers(-64, 64, size=shape).astype(np.int8)
     interp = execute_schedule(g, params, {"input": x}, subtasks, mapping,
                               sched)
-    out = run_numpy(prog, {"input": x})
+    out = BACKENDS[backend](prog, x)
     for t in g.outputs:
         assert np.array_equal(interp[t], out[t])
 
@@ -203,3 +220,103 @@ def test_supports_graph():
     g.add_tensor("x", (4, 8), "int8", is_input=True)
     eltwise(g, "m", "mul", ["x", "x"])
     assert not C.supports_graph(g)
+
+
+# -- pallas backend specifics -------------------------------------------------
+
+def test_pallas_plan_fuses_requant_chains():
+    """Every conv -> requant chain in the CNN presets fuses into the kernel
+    epilogue; fused requant batches become skip steps; fallback kinds go to
+    the JAX lowering; blocks come from the program's scratchpad model."""
+    g, shape, params, prog, _ = _compiled("small_cnn")
+    plan = C._pallas_plan(prog)
+    modes = {s.batch.name: s.mode for s in plan}
+    assert modes["conv1"] == "conv2d" and modes["conv1.rq"] == "skip"
+    assert modes["conv2"] == "conv2d" and modes["conv2.rq"] == "skip"
+    assert modes["pool1"] == "jax" and modes["gap"] == "jax"
+    assert modes["fc"] == "gemm"
+    for s in plan:
+        if s.mode == "conv2d":
+            assert s.mult is not None          # fused epilogue multiplier
+            assert len(s.blocks) == 2
+        if s.mode == "gemm":
+            assert len(s.blocks) == 3
+
+
+def test_pallas_no_fusion_when_acc_is_graph_output():
+    """An int32 accumulator that is itself a graph output must NOT be
+    requant-fused away — and the backend stays bit-exact."""
+    from repro.core.graph import Graph, conv2d, requant
+    g = Graph("acc_out")
+    g.add_tensor("input", (12, 12, 3), "int8", is_input=True)
+    y = conv2d(g, "c1", "input", 8, 3)
+    yq = requant(g, "c1.rq", y)
+    g.mark_output(y)                           # raw int32 accumulator
+    g.mark_output(yq)
+    g.validate()
+    hw = scaled_paper_machine(2)
+    rep, sched, subtasks, mapping = analyze(g, hw, num_cores=2)
+    params = init_params(g, seed=7)
+    prog = lower_program(g, params, subtasks, mapping, sched, hw=hw)
+    plan = C._pallas_plan(prog)
+    modes = {s.batch.name: s.mode for s in plan}
+    assert modes["c1"] == "conv2d" and modes["c1.rq"] == "jax"
+    assert all(s.mult is None for s in plan)
+    x = np.random.default_rng(8).integers(-64, 64,
+                                          size=(12, 12, 3)).astype(np.int8)
+    ref = reference_forward(g, params, {"input": x})
+    out = run_pallas(prog, {"input": x}, interpret=True)
+    for t in g.outputs:
+        assert np.array_equal(ref[t], out[t])
+
+
+def test_pallas_per_channel_requant_fused():
+    """Per-channel multipliers survive epilogue fusion bit-exactly."""
+    g = cnn.small_cnn()
+    hw = scaled_paper_machine(4)
+    rep, sched, subtasks, mapping = analyze(g, hw, num_cores=4)
+    params = init_params(g, seed=9)
+    for op in g.ops:
+        if op.kind == "requant":
+            n = g.tensors[op.outputs[0]].shape[-1]
+            base = float(params[f"{op.name}.mult"])
+            params[f"{op.name}.mult"] = (
+                base * (1 + 0.01 * np.arange(n))).astype(np.float32)
+    prog = lower_program(g, params, subtasks, mapping, sched, hw=hw)
+    x = np.random.default_rng(10).integers(
+        -64, 64, size=(32, 32, 3)).astype(np.int8)
+    ref = reference_forward(g, params, {"input": x})
+    out = run_pallas(prog, {"input": x}, interpret=True)
+    for t in g.outputs:
+        assert np.array_equal(ref[t], out[t])
+
+
+@pytest.mark.parametrize("batch", [1, 3])
+def test_pallas_batched_vmap(batch):
+    """pallas_batched vmaps the kernel program over a leading batch axis."""
+    g, shape, params, prog, _ = _compiled("small_cnn")
+    xb = np.random.default_rng(11).integers(
+        -64, 64, size=(batch,) + shape).astype(np.int8)
+    fn = C.pallas_batched(prog, interpret=True)
+    out = {k: np.asarray(v) for k, v in fn({"input": xb}).items()}
+    for b in range(batch):
+        ref = reference_forward(g, params, {"input": xb[b]})
+        for t in g.outputs:
+            assert np.array_equal(ref[t], out[t][b])
+
+
+def test_engine_pallas_backend():
+    """BatchedInferenceEngine(backend="pallas") serves bit-exact batches."""
+    from repro.serve.engine import BatchedInferenceEngine
+    g = cnn.small_cnn()
+    params = init_params(g, seed=12)
+    eng = BatchedInferenceEngine(g, params, scaled_paper_machine(4), 4,
+                                 backend="pallas")
+    xb = np.random.default_rng(13).integers(
+        -64, 64, size=(2, 32, 32, 3)).astype(np.int8)
+    out = eng.infer(xb)
+    for b in range(2):
+        ref = reference_forward(g, params, {"input": xb[b]})
+        for t in g.outputs:
+            assert np.array_equal(ref[t], out[t][b])
+    assert eng.metrics == {"batches": 1, "samples": 2}

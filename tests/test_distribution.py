@@ -3,7 +3,6 @@ sequential, int8 compressed gradient sync, ZeRO-1 spec shape, and a
 subprocess mini dry-run (forced host devices) exercising the real
 pjit path on a (2, 2, 2) pod-data-model mesh."""
 
-import json
 import os
 import subprocess
 import sys
@@ -12,14 +11,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_config, input_specs
-from repro.distribution.sharding import (batch_shardings, cache_shardings,
-                                         param_pspec, param_shardings,
+from repro.distribution.sharding import (cache_shardings, param_pspec,
                                          zero1_shardings)
 from repro.models import init_params
-from repro.models.serve import cache_spec
 
 
 def _mesh_1x1():
@@ -79,7 +75,6 @@ def test_zero1_adds_data_axis():
 
 
 def test_pipeline_matches_sequential():
-    import multiprocessing
     code = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

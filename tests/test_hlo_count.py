@@ -3,8 +3,6 @@ every roofline number flows through, so it gets its own tests."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.launch.hlo_count import analyze_hlo_text, parse_hlo
 from repro.launch.analysis import collective_bytes

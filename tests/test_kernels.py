@@ -35,6 +35,38 @@ def test_gemm_int8_requant(rng, blocks):
     assert out.dtype == np.int8
 
 
+def test_gemm_requant_round_half_even_epilogue():
+    """The fused epilogue rounds halves to even — the exact contract of
+    kernels.ref, executor._requant_np (np.round), and quantize.requantize.
+    acc * 0.5 produces exact .5 halves for odd accumulators: banker's
+    rounding sends 0.5 -> 0, 1.5 -> 2, 2.5 -> 2, -0.5 -> 0, -1.5 -> -2."""
+    x = np.ones((1, 1), np.int8)
+    w = np.array([[1, 3, 5, -1, -3, 7, 2]], np.int8)     # odd + even accs
+    mult = np.float32(0.5)
+    out = ops.gemm_int8(x, w, mult, backend="interpret", bm=8, bn=8, bk=8)
+    expect = np.array([[0, 2, 2, 0, -2, 4, 1]], np.int8)
+    assert np.array_equal(np.asarray(out), expect)
+    # and the oracle chain agrees with itself
+    from repro.core.executor import _requant_np
+    acc = x.astype(np.int32) @ w.astype(np.int32)
+    assert np.array_equal(_requant_np(acc, mult), expect)
+    assert np.array_equal(np.asarray(ref.gemm_int8(x, w,
+                                                   np.full(7, mult))), expect)
+
+
+def test_gemm_requant_scalar_mult_broadcast(rng):
+    """Scalar multipliers (what init_params produces) broadcast in the
+    kernel epilogue exactly like a per-channel vector."""
+    M, K, N = 33, 65, 17
+    x = rng.integers(-128, 128, (M, K)).astype(np.int8)
+    w = rng.integers(-128, 128, (K, N)).astype(np.int8)
+    mult = np.float32(0.003)
+    out = ops.gemm_int8(x, w, mult, backend="interpret", bm=16, bn=16,
+                        bk=16)
+    expect = ref.gemm_int8(x, w, np.full(N, mult, np.float32))
+    assert np.array_equal(np.asarray(out), np.asarray(expect))
+
+
 # -- conv2d implicit im2col --------------------------------------------------------
 
 @pytest.mark.parametrize("H,W,C,N,k,stride,pad", [
@@ -51,6 +83,43 @@ def test_conv2d_sweep(rng, H, W, C, N, k, stride, pad):
                           backend="interpret")
     expect = ref.conv2d_int8(x, w, stride=stride, padding=pad)
     assert np.array_equal(np.asarray(out), np.asarray(expect))
+
+
+@pytest.mark.parametrize("per_channel", [False, True])
+def test_conv2d_fused_requant(rng, per_channel):
+    """conv2d kernel with the requant epilogue fused == ref conv + requant
+    (bit-exact, interpret mode)."""
+    H, W, C, N, k = 17, 15, 5, 12, 3
+    x = rng.integers(-128, 128, (H, W, C)).astype(np.int8)
+    w = rng.integers(-128, 128, (k * k * C, N)).astype(np.int8)
+    if per_channel:
+        mult = (rng.random(N) * 0.002 + 1e-5).astype(np.float32)
+    else:
+        mult = np.float32(0.001)
+    out = ops.conv2d_int8(x, w, mult, kh=k, kw=k, stride=2, padding=1,
+                          backend="interpret", rows_t=4, bn=8)
+    expect = ref.conv2d_int8(x, w, stride=2, padding=1, requant_mult=mult)
+    assert out.dtype == np.int8
+    assert np.array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_spm_derived_blocks_fit_scratchpad():
+    """hw.derive_*_blocks always return shapes whose working set (with
+    double buffering on dual-ported machines) fits the scratchpad."""
+    from repro.hw import (PAPER_RISCV, TPU_V5E, derive_conv_blocks,
+                          derive_gemm_blocks, scaled_paper_machine)
+    conv_attrs = {"H": 64, "W": 64, "C_in": 32, "C_out": 64, "kh": 3,
+                  "kw": 3, "stride": 1, "padding": 1}
+    for hw in (PAPER_RISCV, TPU_V5E, scaled_paper_machine(4),
+               scaled_paper_machine(16, scratchpad_bytes=64 * 1024)):
+        for out_bytes in (1, 4):
+            bm, bn, bk = derive_gemm_blocks(hw, 4096, 1024, 512, out_bytes)
+            stream = (bm * bk + bk * bn) * (2 if hw.dual_ported else 1)
+            assert stream + bm * bn * (4 + out_bytes) <= hw.scratchpad_bytes
+            rows_t, cbn = derive_conv_blocks(hw, conv_attrs, out_bytes)
+            assert rows_t >= 1 and cbn >= 1
+    # the paper machine's 1 MiB scratchpad yields the paper-scale GEMM tile
+    assert derive_gemm_blocks(PAPER_RISCV, 4096, 1024, 512) == (256,) * 3
 
 
 def test_conv2d_matches_core_executor(rng):

@@ -1,0 +1,48 @@
+"""The CI perf-regression gate (benchmarks/check_regression.py): pure
+comparison logic + the committed baseline artifact's schema."""
+
+import json
+import pathlib
+
+from benchmarks.check_regression import GATED_KEYS, check
+
+BASELINE = pathlib.Path(__file__).parent.parent / "benchmarks" / \
+    "baseline_executor.json"
+
+
+def _row(preset, np_s=3.0, jax_s=3.0):
+    return {"preset": preset, "speedup_np_vs_seed": np_s,
+            "speedup_jax_b8_vs_seed": jax_s}
+
+
+def test_gate_passes_at_and_above_floor():
+    base = {"presets": [_row("a", 2.0, 4.0)]}
+    ok, rows = check({"presets": [_row("a", 1.4, 2.8)]}, base, 0.7)
+    assert ok and len(rows) == len(GATED_KEYS)
+    ok, _ = check({"presets": [_row("a", 10.0, 10.0)]}, base, 0.7)
+    assert ok
+
+
+def test_gate_fails_below_floor_and_on_missing_preset():
+    base = {"presets": [_row("a", 2.0, 4.0)]}
+    ok, rows = check({"presets": [_row("a", 1.39, 4.0)]}, base, 0.7)
+    assert not ok
+    assert [r[-1] for r in rows] == [False, True]
+    ok, rows = check({"presets": []}, base, 0.7)
+    assert not ok and all(r[3] is None for r in rows)
+
+
+def test_committed_baseline_covers_smoke_presets():
+    """The committed baseline must gate exactly what the CI smoke run
+    produces: the smoke presets, each with every gated speedup key."""
+    from benchmarks.bench_executor import SMOKE
+    with open(BASELINE) as f:
+        baseline = json.load(f)
+    presets = {r["preset"] for r in baseline["presets"]}
+    assert presets == set(SMOKE)
+    for r in baseline["presets"]:
+        for key in GATED_KEYS:
+            assert float(r[key]) > 0
+    # the baseline gates itself: identity comparison always passes
+    ok, _ = check(baseline, baseline, threshold=0.7)
+    assert ok

@@ -3,7 +3,6 @@ numpy executor / jnp kernels, end-to-end quantized-vs-float CNN SQNR."""
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import quantize as Q
 from repro.core.executor import _requant_np

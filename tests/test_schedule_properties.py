@@ -23,7 +23,7 @@ import hypothesis.strategies as st          # noqa: E402
 from hypothesis import HealthCheck, given, settings  # noqa: E402
 
 from repro.core.cnn import small_cnn
-from repro.core.graph import Graph, OpNode, eltwise, linear, requant
+from repro.core.graph import Graph, eltwise, linear, requant
 from repro.core.mapping import map_reverse_affinity, map_round_robin
 from repro.core.partition import Partitioner
 from repro.core.schedule import compute_schedule, validate_schedule

@@ -2,7 +2,6 @@
 LM decode graph pipeline."""
 
 import jax
-import numpy as np
 import pytest
 
 from repro.configs import get_config

@@ -2,17 +2,14 @@
 fault recovery with injected failures, straggler watchdog, data pipeline
 determinism, gradient-compression math, microbatch equivalence."""
 
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig, SyntheticTokens
 from repro.models import init_params
-from repro.models.transformer import train_loss
 from repro.train.checkpoint import CheckpointManager
 from repro.train.fault import (InjectedFailure, StragglerWatchdog,
                                run_with_recovery)

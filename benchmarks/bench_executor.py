@@ -6,13 +6,17 @@ Per CNN preset (smallest -> largest) this measures, on one machine model:
     resolution) + loop im2col, fresh every call;
   * ``interp``       — the retained oracle with hoisted setup
     (`ScheduleReplayer`, vectorized im2col);
-  * ``compiled_np``  — `repro.core.compiled.run_numpy` (fused per-op tile
+  * ``compiled_np``  — the registry's ``numpy`` backend (fused per-op tile
     batches, exact BLAS GEMM);
-  * ``compiled_jax`` — the jitted+vmapped program, reported per-sample at
-    batch 1 and batch 8 (compile time excluded; that's the cached cost);
-  * ``compiled_pallas`` — the Pallas kernel backend (`run_pallas`): real
-    Mosaic kernels on TPU, interpret mode on CPU CI (where its numbers
-    measure the XLA lowering of the kernel grid, not kernel-grade speed).
+  * ``compiled_jax`` — the registry's ``jax`` backend (jitted+vmapped
+    program), reported per-sample at batch 1 and batch 8 (compile time
+    excluded; that's the cached cost);
+  * ``compiled_pallas`` — the registry's ``pallas`` backend: real Mosaic
+    kernels on TPU, interpret mode on CPU CI (where its numbers measure
+    the XLA lowering of the kernel grid, not kernel-grade speed).
+
+All compiled paths go through one `repro.compile` Deployment per preset
+and its backend-registry runners — the same artifact serving uses.
 
 Every path is checked bit-exact against ``reference_forward`` before being
 timed; a mismatch raises ``BackendMismatch`` (which `benchmarks.run`
@@ -30,9 +34,8 @@ import time
 
 import numpy as np
 
-from repro.core import (analyze, cnn, init_params, jit_batched,
-                        lower_program, reference_forward, run_numpy,
-                        run_pallas)
+import repro
+from repro.core import cnn, init_params, reference_forward
 from repro.core.executor import (ScheduleReplayer,
                                  _execute_schedule_unprepared)
 from repro.hw import scaled_paper_machine
@@ -74,48 +77,51 @@ def _bench_preset(name: str, reps: int) -> dict:
     build, shape = PRESETS[name]
     g = build()
     hw = scaled_paper_machine(CORES)
-    rep, sched, subtasks, mapping = analyze(g, hw, num_cores=CORES,
-                                            validate=False)
     params = init_params(g)
     rng = np.random.default_rng(0)
     x = rng.integers(-64, 64, size=shape).astype(np.int8)
     xb = rng.integers(-64, 64, size=(BATCH,) + shape).astype(np.int8)
     ref = reference_forward(g, params, {"input": x})
 
-    prog = lower_program(g, params, subtasks, mapping, sched, hw=hw)
+    # one compile, every backend: the deployment the serving engines use
+    dep = repro.compile(g, hw, backend="jax", params=params,
+                        num_cores=CORES, validate=False)
+    subtasks = dep.artifacts["partition"]
+    mapping, sched = dep.artifacts["map"], dep.schedule
     replayer = ScheduleReplayer(g, subtasks, mapping, sched)
-    jfn = jit_batched(prog)
+    runners = {be: dep.runner(backend=be)
+               for be in ("numpy", "jax", "pallas")}
+    jfn_b = dep.runner(batched=True, backend="jax")
 
     # correctness first: every timed path is bit-exact vs the oracle
-    for backend, out in (("interp", replayer.run(params, {"input": x})),
-                         ("numpy", run_numpy(prog, {"input": x})),
-                         ("pallas", run_pallas(prog, {"input": x}))):
+    # (including the batched jax runner — vmap is a different compiled
+    # function than the single-sample jit)
+    checks = [("interp", replayer.run(params, {"input": x}))]
+    checks += [(be, run({"input": x})) for be, run in runners.items()]
+    checks.append(("jax_batched",
+                   {t: v[0] for t, v in jfn_b({"input": x[None]}).items()}))
+    for backend, out in checks:
         for t in g.outputs:
             if not np.array_equal(ref[t], out[t]):
                 raise BackendMismatch(
                     f"{name}: {backend} backend not bit-exact on {t}")
-    jout = jfn({"input": np.asarray(x)[None]})
-    for t in g.outputs:
-        if not np.array_equal(ref[t], np.asarray(jout[t])[0]):
-            raise BackendMismatch(f"{name}: jax backend not bit-exact on {t}")
 
-    import jax.numpy as jnp
-    x1j, xbj = jnp.asarray(x[None]), jnp.asarray(xb)
+    x1, xbb = x[None], xb
     times = {
         "interp_seed": _time(lambda: _execute_schedule_unprepared(
             g, params, {"input": x}, subtasks, mapping, sched), reps),
         "interp": _time(lambda: replayer.run(params, {"input": x}), reps),
-        "compiled_np": _time(lambda: run_numpy(prog, {"input": x}), reps),
-        "compiled_jax_b1": _time(lambda: jfn({"input": x1j}), reps),
+        "compiled_np": _time(lambda: runners["numpy"]({"input": x}), reps),
+        "compiled_jax_b1": _time(lambda: jfn_b({"input": x1}), reps),
         "compiled_pallas": _time(
-            lambda: run_pallas(prog, {"input": x}), reps),
+            lambda: runners["pallas"]({"input": x}), reps),
     }
     times["compiled_jax_b8_per_sample"] = _time(
-        lambda: jfn({"input": xbj}), reps) / BATCH
+        lambda: jfn_b({"input": xbb}), reps) / BATCH
     return {
         "preset": name, "cores": CORES, "subtasks": len(subtasks),
         "ops": len(g.ops), "times_s": times,
-        "backends": ["numpy", "jax", "pallas"],
+        "backends": repro.compiler.list_backends(),
         "speedup_np_vs_seed": times["interp_seed"] / times["compiled_np"],
         "speedup_jax_b8_vs_seed": (times["interp_seed"]
                                    / times["compiled_jax_b8_per_sample"]),

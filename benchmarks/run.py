@@ -15,9 +15,14 @@
 for CI; the perf-smoke CI job additionally runs the executor benchmark as
 its own step to own the BENCH_executor.json artifact and the perf gate.
 
-A backend-vs-oracle mismatch (``bench_executor.BackendMismatch`` or any
-AssertionError) aborts the whole run immediately with a non-zero exit;
-other section failures are reported at the end.
+Every section is timed: a ``== section <name>: ok|FAILED (wall s) ==``
+line is printed as it finishes, and a per-section wall-time table is
+printed at the end, so a slow or failing section is identifiable by name
+without reading tracebacks. A backend-vs-oracle mismatch
+(``bench_executor.BackendMismatch`` or any AssertionError) aborts the
+whole run immediately with a non-zero exit naming the section; any other
+section failure is reported at the end and also exits non-zero with the
+failed section names.
 
 Prints ``name,us_per_call,derived`` CSV at the end (harness contract).
 """
@@ -25,6 +30,7 @@ Prints ``name,us_per_call,derived`` CSV at the end (harness contract).
 from __future__ import annotations
 
 import sys
+import time
 import traceback
 
 
@@ -55,19 +61,31 @@ def main(argv: list[str] | None = None) -> None:
             ("roofline", lambda: roofline.run(csv_rows)),
         ]
     failed = []
+    walls: list[tuple[str, float, str]] = []
     for name, fn in sections:
+        t0 = time.perf_counter()
         try:
             fn()
+            status = "ok"
         except bench_executor.BackendMismatch:
             # a backend producing wrong values is never "just" a failed
             # section — abort the run immediately
             traceback.print_exc()
+            print(f"== section {name}: FAILED "
+                  f"({time.perf_counter() - t0:.2f} s) ==")
             print(f"FATAL: backend mismatch in section {name}",
                   file=sys.stderr)
             sys.exit(1)
         except Exception:  # noqa: BLE001 — report all sections
             failed.append(name)
             traceback.print_exc()
+            status = "FAILED"
+        wall = time.perf_counter() - t0
+        walls.append((name, wall, status))
+        print(f"== section {name}: {status} ({wall:.2f} s) ==")
+    print("\n== section wall time ==")
+    for name, wall, status in walls:
+        print(f"{name:<16}{wall:>8.2f} s  {status}")
     print("\n== CSV ==")
     print("name,us_per_call,derived")
     for name, us, derived in csv_rows:

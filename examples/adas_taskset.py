@@ -8,18 +8,21 @@ This demo mixes:
   * a lane-keeper        (small CNN)              @ 100 Hz
   * a speech interface   (LM decode step)         @ 10 Hz
 
-and compiles them into ONE static hyperperiod schedule for the single DMA
-channel + worker cores, printing per-network WCET response bounds, the
-schedulability verdict, and the replay check that actual (faster) times
-never violate the bounds.
+and compiles them — one `repro.compile` call on the spec list — into ONE
+static hyperperiod schedule for the single DMA channel + worker cores,
+printing per-network WCET response bounds, the schedulability verdict,
+the replay check that actual (faster) times never violate the bounds, and
+a real inference through a member network's executable deployment.
 
     PYTHONPATH=src python examples/adas_taskset.py
 """
 
+import numpy as np
+
+import repro
 from repro.core import cnn
 from repro.core.lmgraph import lm_decode_graph
 from repro.core.taskset import NetworkSpec, schedule_taskset
-from repro.core.wcet import analyze_taskset
 from repro.hw import scaled_paper_machine
 from repro.models.config import ModelConfig
 
@@ -46,10 +49,11 @@ def main():
     print("ADAS taskset: detector@30Hz + lane-keeper@100Hz + speech@10Hz")
     print(f"on {hw.name} ({hw.num_workers} cores, single DMA channel)")
     print("=" * 72)
-    report, compiled = analyze_taskset(specs, hw, num_cores=16)
-    print(report.summary())
-    assert report.schedulable, "demo taskset should fit the paper machine"
+    deploy = repro.compile(specs, hw, backend="numpy", num_cores=16)
+    print(deploy.summary())
+    assert deploy.schedulable, "demo taskset should fit the paper machine"
 
+    compiled, report = deploy.taskset, deploy.report
     print()
     print("merged hyperperiod program: "
           f"{len(compiled.schedule.dma)} DMA transactions, "
@@ -68,6 +72,14 @@ def main():
               f"bound {bound*1e3:7.3f} ms  "
               f"(tightness {actual/bound:.2f})")
     print("\nall networks meet their deadlines; bounds hold under replay")
+
+    # members whose op kinds all have a lowering are executable deployments
+    g = specs[1].graph
+    x = np.random.default_rng(0).integers(
+        -64, 64, tuple(g.tensors[g.inputs[0]].shape)).astype(np.int8)
+    out = deploy.run("lane_keeper", x)
+    print("lane_keeper logits: "
+          f"{out[g.outputs[0]].ravel()[:6]}")
 
 
 if __name__ == "__main__":

@@ -1,18 +1,24 @@
-"""Quickstart: the paper's pipeline end to end on its own target workload.
+"""Quickstart: the paper's compiler, end to end, through `repro.compile`.
 
-Builds ResNet50 (int8, batch=1), compiles it with the predictable-inference
-compiler for the paper's 16-core machine, prints the WCET report, validates
-the schedule, and proves numerical correctness of the tiled execution
-against the whole-graph oracle on a reduced copy.
+Builds ResNet50 (int8, batch=1), runs the staged pass pipeline
+(quantize -> partition -> map -> schedule -> wcet -> lower) for the
+paper's 16-core machine, prints the WCET report and per-stage compile
+telemetry, proves numerical correctness of the compiled deployment on all
+three registered backends against the whole-graph oracle, and round-trips
+the deployment through its serialized artifact.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
+import os
+import tempfile
+
 import numpy as np
 
-from repro.core import (analyze, cnn, execute_schedule, init_params,
-                        reference_forward)
+import repro
+from repro.core import cnn, reference_forward
 from repro.core.schedule import compute_schedule, validate_schedule
+from repro.core.wcet import analyze
 from repro.hw import PAPER_RISCV
 
 
@@ -23,6 +29,7 @@ def main():
     print("=" * 72)
     g = cnn.resnet50()
     print(g)
+    # analysis-only flow (no lowering): the retained `analyze` entry point
     report, sched, subtasks, mapping = analyze(g, PAPER_RISCV)
     print(report.summary())
     print(f"subtasks={len(subtasks)}  dma transactions={len(sched.dma)}")
@@ -42,20 +49,39 @@ def main():
 
     print()
     print("=" * 72)
-    print("2. Bit-exact tiled execution (reduced ResNet, 4 cores)")
+    print("2. repro.compile: one call, a deployable artifact "
+          "(reduced ResNet, 4 cores)")
     print("=" * 72)
     g2 = cnn.resnet50(h=32, w=32, width=0.25, blocks=(1, 1, 1, 1),
                       num_classes=16)
-    rep2, sched2, st2, mp2 = analyze(g2, PAPER_RISCV, num_cores=4)
-    params = init_params(g2, seed=0)
+    deploy = repro.compile(g2, PAPER_RISCV, backend="numpy", num_cores=4)
+    print(deploy.summary())
+
+    # bit-exact tiled execution on every registered backend
+    params = deploy.artifacts["quantize"]["params"]
     x = np.random.default_rng(0).integers(
         -64, 64, (32, 32, 3)).astype(np.int8)
     ref = reference_forward(g2, params, {"input": x})
-    out = execute_schedule(g2, params, {"input": x}, st2, mp2, sched2)
-    exact = all(np.array_equal(ref[t], out[t]) for t in g2.outputs)
-    print(f"schedule-replay == whole-graph oracle: {exact}")
-    print(f"logits: {out[g2.outputs[0]].ravel()[:6]}")
-    assert exact
+    for backend in repro.compiler.list_backends():
+        out = deploy.run(x, backend=backend)
+        exact = all(np.array_equal(ref[t], out[t]) for t in g2.outputs)
+        print(f"backend {backend:<7} == whole-graph oracle: {exact}")
+        assert exact
+    print(f"logits: {deploy.run(x)[g2.outputs[0]].ravel()[:6]}")
+
+    print()
+    print("=" * 72)
+    print("3. Ahead-of-time artifact: save -> load -> identical deployment")
+    print("=" * 72)
+    path = os.path.join(tempfile.mkdtemp(), "resnet_reduced.rtdep")
+    deploy.save(path)
+    reloaded = repro.Deployment.load(path, machine=PAPER_RISCV, graph=g2)
+    out = reloaded.run(x)
+    same = all(np.array_equal(ref[t], out[t]) for t in g2.outputs)
+    print(f"saved {os.path.getsize(path)} bytes -> reloaded; "
+          f"bit-exact: {same}, WCET bound preserved: "
+          f"{reloaded.wcet_bound_s == deploy.wcet_bound_s}")
+    assert same and reloaded.wcet_bound_s == deploy.wcet_bound_s
 
 
 if __name__ == "__main__":

@@ -1,5 +1,34 @@
 """repro: predictable NN inference (Kirschner et al. 2024) re-targeted to
 TPU pods — static DMA scheduling + compositional WCET as a first-class
-framework feature, plus the training/serving substrate around it."""
+framework feature, plus the training/serving substrate around it.
 
-__version__ = "1.0.0"
+The compiler front door lives here:
+
+    import repro
+    deploy = repro.compile(graph, machine, backend="jax")
+    y = deploy.run(x)
+
+`repro.compile` / `repro.Deployment` are loaded lazily so that importing
+the bare package stays dependency-free (the compiler pulls in jax)."""
+
+__version__ = "1.1.0"
+
+_COMPILER_EXPORTS = ("compile", "Deployment", "TasksetDeployment",
+                     "compiler")
+
+
+def __getattr__(name):
+    if name in _COMPILER_EXPORTS:
+        # importlib (not `from . import compiler`): the from-import form
+        # re-enters this __getattr__ before the submodule is bound on the
+        # package, recursing forever.
+        import importlib
+        compiler = importlib.import_module(".compiler", __name__)
+        if name == "compiler":
+            return compiler
+        return getattr(compiler, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_COMPILER_EXPORTS))

@@ -1,0 +1,37 @@
+"""repro.compiler — the paper's compiler as a staged, pluggable pipeline.
+
+Public surface:
+
+  * `compile(graph_or_taskset, machine, *, backend="jax", deadline=None)`
+    -> `Deployment` / `TasksetDeployment` — the single entry point
+    (also re-exported as `repro.compile`);
+  * `Deployment` — serializable (program, schedule, WCET bound, machine
+    fingerprint) bundle with `run` / `save` / `load`;
+  * the backend registry (`register_backend`, `get_backend`,
+    `list_backends`) — numpy / jax / pallas built in, third-party
+    backends pluggable by name;
+  * the pass pipeline (`Pass`, `PassManager`, `PassContext`,
+    `default_passes`) for custom compile flows and per-stage inspection.
+
+See docs/api.md for the full tour.
+"""
+
+from .api import clear_deployment_cache, compile                # noqa: A004
+from .backends import (Backend, BackendError, get_backend, list_backends,
+                       register_backend, unregister_backend)
+from .deployment import (ARTIFACT_FORMAT, ArtifactError, Deployment,
+                         TasksetDeployment)
+from .pipeline import (DeadlineError, LowerPass, MapPass, PartitionPass,
+                       Pass, PassContext, PassManager, PipelineError,
+                       QuantizePass, SchedulePass, StageRecord, WCETPass,
+                       default_passes)
+
+__all__ = [
+    "compile", "clear_deployment_cache",
+    "Deployment", "TasksetDeployment", "ArtifactError", "ARTIFACT_FORMAT",
+    "Backend", "BackendError", "register_backend", "unregister_backend",
+    "get_backend", "list_backends",
+    "Pass", "PassManager", "PassContext", "StageRecord", "default_passes",
+    "QuantizePass", "PartitionPass", "MapPass", "SchedulePass", "WCETPass",
+    "LowerPass", "PipelineError", "DeadlineError",
+]

@@ -1,0 +1,143 @@
+"""Backend registry: named execution strategies over a CompiledProgram.
+
+One lowered program, many ways to replay it. Each backend is registered by
+name and provides two factories — `single` (one sample) and `batched`
+(leading batch axis) — that take a `CompiledProgram` and return a runner
+with the uniform serving contract:
+
+    runner({input_name: np.ndarray, ...}) -> {output_name: np.ndarray, ...}
+
+numpy in, numpy out, graph outputs only, blocking until the result is
+ready. `Deployment.run` / `BatchedInferenceEngine` / the executor benchmark
+all go through this table, so a third-party backend (a new kernel library,
+a remote accelerator client) plugs in with one `register_backend` call and
+is immediately selectable as `repro.compile(..., backend="mine")`.
+
+Built-in backends (see repro/core/compiled.py for their numerics):
+
+  * ``numpy``  — vectorized fused-tile replay; bit-exact oracle twin.
+  * ``jax``    — the whole program as one jitted (and, batched, vmapped)
+    XLA function; the serving fast path.
+  * ``pallas`` — gemm/conv tile batches on the Pallas kernels; real Mosaic
+    lowering on TPU, interpret mode elsewhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import numpy as np
+
+from ..core import compiled as _C
+
+
+class BackendError(KeyError):
+    """Unknown or conflicting backend registration."""
+
+
+Runner = Callable[[dict], dict]
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """A named pair of runner factories over a lowered program."""
+
+    name: str
+    single: Callable[[_C.CompiledProgram], Runner]
+    batched: Callable[[_C.CompiledProgram], Runner]
+
+
+_REGISTRY: dict[str, Backend] = {}
+
+
+def register_backend(name: str, *,
+                     single: Callable[[_C.CompiledProgram], Runner],
+                     batched: Callable[[_C.CompiledProgram], Runner] | None
+                     = None,
+                     overwrite: bool = False) -> Backend:
+    """Register (or replace, with overwrite=True) an execution backend.
+
+    `batched` defaults to a per-sample loop over `single` — correct for any
+    backend, so plugins only need the single-sample runner."""
+    if name in _REGISTRY and not overwrite:
+        raise BackendError(
+            f"backend {name!r} already registered; pass overwrite=True")
+    if batched is None:
+        batched = _loop_batched(single)
+    be = Backend(name=name, single=single, batched=batched)
+    _REGISTRY[name] = be
+    return be
+
+
+def unregister_backend(name: str) -> None:
+    _REGISTRY.pop(name, None)
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise BackendError(
+            f"unknown backend {name!r}; registered: {list_backends()}"
+        ) from None
+
+
+def list_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def _loop_batched(single_factory):
+    """Default batched factory: run `single` per sample and stack."""
+    def factory(prog: _C.CompiledProgram) -> Runner:
+        single = single_factory(prog)
+
+        def run(batch: dict) -> dict:
+            B = next(iter(batch.values())).shape[0]
+            outs = [single({k: v[b] for k, v in batch.items()})
+                    for b in range(B)]
+            return {t: np.stack([o[t] for o in outs])
+                    for t in prog.graph.outputs}
+        return run
+    return factory
+
+
+# -- built-in backends --------------------------------------------------------
+
+def _numpy_single(prog: _C.CompiledProgram) -> Runner:
+    def run(inputs: dict) -> dict:
+        vals = _C.run_numpy(prog, inputs)      # exposes every buffer
+        return {t: vals[t] for t in prog.graph.outputs}
+    return run
+
+
+def _jax_single(prog: _C.CompiledProgram) -> Runner:
+    _C.jit_single(prog)                        # trace once at build time
+    return functools.partial(_C.run_jax, prog, batched=False)
+
+
+def _jax_batched(prog: _C.CompiledProgram) -> Runner:
+    _C.jit_batched(prog)
+    return functools.partial(_C.run_jax, prog, batched=True)
+
+
+def _pallas_single(prog: _C.CompiledProgram) -> Runner:
+    return functools.partial(_C.run_pallas, prog)  # interpret auto off-TPU
+
+
+def _pallas_batched(prog: _C.CompiledProgram) -> Runner:
+    # the one batched path without a core convenience wrapper: jit+vmap
+    # from core, the shared numpy-in/numpy-out contract applied here
+    import jax.numpy as jnp
+    fn = _C.pallas_batched(prog)               # interpret auto off-TPU
+
+    def run(batch: dict) -> dict:
+        out = fn({k: jnp.asarray(v) for k, v in batch.items()})
+        return {k: np.asarray(v) for k, v in out.items()}
+    return run
+
+
+register_backend("numpy", single=_numpy_single)
+register_backend("jax", single=_jax_single, batched=_jax_batched)
+register_backend("pallas", single=_pallas_single, batched=_pallas_batched)

@@ -1,0 +1,264 @@
+"""Deployment: the generate-once / deploy-many artifact of the compiler.
+
+The paper's unit of deployment is the bundle its compiler emits — per-core
+programs, the static DMA schedule, and the WCET bound for one machine.
+`Deployment` is that bundle as a first-class object:
+
+  * `run(inputs)`      — execute through any registered backend;
+  * `save(path)`       — serialize the whole artifact (zip: JSON manifest
+    + pickled payload) for ahead-of-time compilation;
+  * `Deployment.load(path)` — reload and validate: the manifest's graph
+    signature and machine fingerprint are re-derived from the embedded
+    objects and (optionally) checked against the machine/graph the caller
+    intends to deploy on — a stale or foreign artifact refuses to load
+    instead of silently producing bounds for the wrong machine.
+
+Artifact format (version 1): a ZIP archive with
+    manifest.json   format version, graph name + signature, machine name +
+                    fingerprint, backend, WCET bound, core count, and the
+                    sha256 of payload.pkl (checked before unpickling)
+    payload.pkl     pickled {program, schedule, report, machine, stages,
+                    artifacts} — the CompiledProgram drops its jit caches
+                    on pickling and rebuilds them lazily after load.
+
+The payload is a pickle: the sha256 check catches corruption and
+accidental tampering *before* any byte is deserialized, but pickle
+fundamentally executes code on load, so — like torch checkpoints — only
+load artifacts you produced or trust.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import pickle
+import zipfile
+
+from ..core.compiled import CompiledProgram, graph_signature
+from ..core.graph import Graph
+from ..core.schedule import StaticSchedule
+from ..core.taskset import CompiledTaskset
+from ..core.wcet import TasksetReport, WCETReport
+from ..hw import HardwareModel
+from .backends import get_backend
+from .pipeline import StageRecord
+
+ARTIFACT_FORMAT = 1
+
+
+class ArtifactError(ValueError):
+    """A saved deployment failed validation (stale, foreign, or corrupt)."""
+
+
+@dataclasses.dataclass
+class Deployment:
+    """One compiled network, ready to run, save, or inspect."""
+
+    program: CompiledProgram
+    schedule: StaticSchedule
+    report: WCETReport
+    machine: HardwareModel
+    backend: str = "jax"
+    stages: list[StageRecord] = dataclasses.field(default_factory=list)
+    artifacts: dict = dataclasses.field(default_factory=dict)
+    _runners: dict = dataclasses.field(default_factory=dict, repr=False,
+                                       compare=False)
+
+    # -- identity ------------------------------------------------------------
+    @property
+    def graph(self) -> Graph:
+        return self.program.graph
+
+    @property
+    def graph_signature(self) -> str:
+        return self.program.signature
+
+    @property
+    def machine_fingerprint(self) -> str:
+        return self.machine.fingerprint()
+
+    @property
+    def wcet_bound_s(self) -> float:
+        return self.report.wcet_total_s
+
+    # -- execution -----------------------------------------------------------
+    def runner(self, *, batched: bool = False, backend: str | None = None):
+        """The raw runner callable ({name: array} -> {name: array}) for hot
+        loops; built once per (backend, batched) and cached."""
+        name = backend or self.backend
+        key = (name, bool(batched))
+        if key not in self._runners:
+            be = get_backend(name)
+            make = be.batched if batched else be.single
+            self._runners[key] = make(self.program)
+        return self._runners[key]
+
+    def run(self, inputs, *, batched: bool = False,
+            backend: str | None = None) -> dict:
+        """Execute the deployment. `inputs` is {input_name: array} or a
+        bare array for single-input graphs; returns {output_name: array}.
+        `backend` overrides the deployment's default for this call."""
+        if not isinstance(inputs, dict):
+            (name,) = self.graph.inputs
+            inputs = {name: inputs}
+        return self.runner(batched=batched, backend=backend)(inputs)
+
+    def with_backend(self, name: str) -> "Deployment":
+        """A view of the same compiled artifact on another backend (shares
+        the program, so jit caches are shared too)."""
+        get_backend(name)                       # fail fast if unknown
+        return dataclasses.replace(self, backend=name)
+
+    # -- reporting -----------------------------------------------------------
+    def summary(self) -> str:
+        lines = [f"Deployment[{self.graph.name} @ {self.machine.name} "
+                 f"x{self.program.num_cores}, backend={self.backend}, "
+                 f"sig={self.graph_signature}, "
+                 f"machine={self.machine_fingerprint}]",
+                 self.report.summary()]
+        if self.stages:
+            lines.append("compile stages:")
+            lines += ["  " + s.row() for s in self.stages]
+        return "\n".join(lines)
+
+    # -- serialization -------------------------------------------------------
+    def _manifest(self) -> dict:
+        return {
+            "format": ARTIFACT_FORMAT,
+            "graph": self.graph.name,
+            "graph_signature": self.graph_signature,
+            "machine": self.machine.name,
+            "machine_fingerprint": self.machine_fingerprint,
+            "backend": self.backend,
+            "num_cores": self.program.num_cores,
+            "wcet_total_s": self.report.wcet_total_s,
+        }
+
+    def save(self, path: str) -> str:
+        """Write the artifact (ZIP manifest + payload). Returns `path`."""
+        payload = {
+            "program": self.program, "schedule": self.schedule,
+            "report": self.report, "machine": self.machine,
+            "backend": self.backend, "stages": self.stages,
+            "artifacts": self.artifacts,
+        }
+        blob = pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL)
+        manifest = {**self._manifest(),
+                    "payload_sha256": hashlib.sha256(blob).hexdigest()}
+        with zipfile.ZipFile(path, "w", zipfile.ZIP_DEFLATED) as z:
+            z.writestr("manifest.json", json.dumps(manifest, indent=2))
+            z.writestr("payload.pkl", blob)
+        return path
+
+    @classmethod
+    def load(cls, path: str, *, machine: HardwareModel | None = None,
+             graph: Graph | None = None) -> "Deployment":
+        """Reload a saved deployment, refusing stale artifacts.
+
+        The payload's sha256 is checked against the manifest BEFORE
+        unpickling (corruption never reaches the deserializer); the graph
+        signature and machine fingerprint are then re-derived from the
+        embedded payload and checked against the manifest (detects
+        signature drift across code versions). If `machine` / `graph` are
+        given, the artifact must additionally match them — the
+        ahead-of-time contract: an artifact compiled for machine A never
+        silently deploys on machine B. The payload is still a pickle, so
+        only load artifacts from trusted sources (see module docstring).
+        """
+        try:
+            with zipfile.ZipFile(path) as z:
+                manifest = json.loads(z.read("manifest.json"))
+                if manifest.get("format") != ARTIFACT_FORMAT:
+                    raise ArtifactError(
+                        f"{path}: unsupported artifact format "
+                        f"{manifest.get('format')!r} "
+                        f"(expected {ARTIFACT_FORMAT})")
+                blob = z.read("payload.pkl")
+                digest = hashlib.sha256(blob).hexdigest()
+                if digest != manifest.get("payload_sha256"):
+                    raise ArtifactError(
+                        f"{path}: payload hash mismatch (manifest "
+                        f"{manifest.get('payload_sha256')!r}, payload "
+                        f"hashes to {digest}) — corrupt artifact")
+                payload = pickle.loads(blob)
+            dep = cls(program=payload["program"],
+                      schedule=payload["schedule"],
+                      report=payload["report"], machine=payload["machine"],
+                      backend=payload["backend"], stages=payload["stages"],
+                      artifacts=payload.get("artifacts", {}))
+            manifest_sig = manifest["graph_signature"]
+            manifest_fp = manifest["machine_fingerprint"]
+        except (zipfile.BadZipFile, KeyError, pickle.UnpicklingError,
+                TypeError,                   # payload not a dict
+                EOFError,                    # truncated payload
+                AttributeError, ModuleNotFoundError, ImportError,
+                json.JSONDecodeError) as e:  # class moved / stale pickle
+            raise ArtifactError(f"{path}: not a deployment artifact "
+                                f"({e})") from e
+        sig = graph_signature(dep.program.graph)
+        if sig != manifest_sig:
+            raise ArtifactError(
+                f"{path}: graph signature mismatch (artifact "
+                f"{manifest_sig}, embedded graph hashes to "
+                f"{sig}) — stale artifact, recompile")
+        fp = dep.machine.fingerprint()
+        if fp != manifest_fp:
+            raise ArtifactError(
+                f"{path}: machine fingerprint mismatch (artifact "
+                f"{manifest_fp}, embedded machine "
+                f"hashes to {fp}) — stale artifact, recompile")
+        if machine is not None and machine.fingerprint() != fp:
+            raise ArtifactError(
+                f"{path}: compiled for {manifest.get('machine')} ({fp}), "
+                f"refusing to deploy on {machine.name} "
+                f"({machine.fingerprint()})")
+        if graph is not None and graph_signature(graph) != sig:
+            raise ArtifactError(
+                f"{path}: compiled for graph {manifest.get('graph')} "
+                f"({sig}), refusing to deploy graph {graph.name} "
+                f"({graph_signature(graph)})")
+        return dep
+
+
+@dataclasses.dataclass
+class TasksetDeployment:
+    """A compiled multi-network taskset: the hyperperiod analysis plus one
+    executable `Deployment` per network with a compiled lowering (networks
+    with analysis-only op kinds — LM decode graphs — are analyzed in the
+    schedulability report but get no executable deployment)."""
+
+    report: TasksetReport
+    taskset: CompiledTaskset
+    deployments: dict[str, Deployment]
+    machine: HardwareModel
+    backend: str = "jax"
+
+    @property
+    def schedulable(self) -> bool:
+        return self.report.schedulable
+
+    @property
+    def hyperperiod_s(self) -> float:
+        return self.taskset.hyperperiod_s
+
+    @property
+    def machine_fingerprint(self) -> str:
+        return self.machine.fingerprint()
+
+    def run(self, network: str, inputs, **kw) -> dict:
+        """Run one sample through a member network's deployment."""
+        try:
+            dep = self.deployments[network]
+        except KeyError:
+            raise KeyError(
+                f"network {network!r} has no executable deployment "
+                f"(available: {sorted(self.deployments)})") from None
+        return dep.run(inputs, **kw)
+
+    def summary(self) -> str:
+        lines = [self.report.summary()]
+        if self.deployments:
+            lines.append("executable deployments: "
+                         + ", ".join(sorted(self.deployments)))
+        return "\n".join(lines)

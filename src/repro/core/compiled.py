@@ -136,6 +136,17 @@ class CompiledProgram:
     def num_instructions(self) -> int:
         return sum(len(s) for s in self.core_streams)
 
+    # Programs are serializable (repro.compiler.Deployment.save): the jit /
+    # pallas caches hold traced closures that cannot be pickled and are
+    # rebuilt lazily on first use after load, so they are dropped here.
+    def __getstate__(self):
+        state = self.__dict__.copy()
+        state["_jax_single"] = None
+        state["_jax_jit_single"] = None
+        state["_jax_batched"] = None
+        state["_pallas_cache"] = {}
+        return state
+
 
 # -- signatures + cache -------------------------------------------------------
 
@@ -161,9 +172,18 @@ _PROGRAM_CACHE: "OrderedDict[tuple, tuple[dict, CompiledProgram]]" = \
     OrderedDict()
 _PROGRAM_CACHE_CAP = 64          # bounds baked-weight memory in long servers
 
+# Dependent caches (e.g. repro.compiler's deployment cache) register a
+# clearer here so `clear_program_cache()` is the single cache-reset entry
+# point for the whole compile pipeline.
+_CACHE_CLEAR_HOOKS: list = []
+
 
 def clear_program_cache() -> None:
+    """Drop every cached compiled program — and, via registered hooks, any
+    dependent cache (the `repro.compile` deployment cache)."""
     _PROGRAM_CACHE.clear()
+    for hook in _CACHE_CLEAR_HOOKS:
+        hook()
 
 
 def compile_graph(g: Graph, params: dict, hw: HardwareModel,
@@ -171,12 +191,11 @@ def compile_graph(g: Graph, params: dict, hw: HardwareModel,
                   use_cache: bool = True) -> CompiledProgram:
     """Full pipeline + lowering: partition -> map -> schedule -> lower.
 
-    Cached (LRU, bounded) on (graph signature, params identity, machine,
-    cores): a serving engine replaying many jobs of the same network
-    compiles it once.
+    Cached (LRU, bounded) on (graph signature, params identity, machine
+    fingerprint, cores): a serving engine replaying many jobs of the same
+    network compiles it once.
     """
-    key = (graph_signature(g), id(params), hw.name, hw.num_workers,
-           hw.scratchpad_bytes, hw.vector_lanes_int8, num_cores)
+    key = (graph_signature(g), id(params), hw.fingerprint(), num_cores)
     if use_cache:
         hit = _PROGRAM_CACHE.get(key)
         if hit is not None and hit[0] is params:

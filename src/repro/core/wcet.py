@@ -79,22 +79,15 @@ def critical_path(subtasks: list[Subtask], hw: HardwareModel) -> float:
     return max(memo.values()) if memo else 0.0
 
 
-def analyze(graph: Graph, hw: HardwareModel,
-            num_cores: int | None = None,
-            mapping: Mapping | None = None,
-            arbitration: str = "static",
-            validate: bool = True) -> tuple[WCETReport, StaticSchedule,
-                                            list[Subtask], Mapping]:
-    """Full paper pipeline: partition -> map -> schedule -> WCET bound."""
-    part = Partitioner(hw)
-    subtasks = part.partition(graph)
-    if mapping is None:
-        mapping = map_reverse_affinity(subtasks, hw, num_cores)
-    sched = compute_schedule(subtasks, mapping, hw, wcet=True,
-                             arbitration=arbitration)
-    if validate:
-        validate_schedule(sched, subtasks, mapping)
+def report_from_schedule(graph: Graph, hw: HardwareModel,
+                         subtasks: list[Subtask], mapping: Mapping,
+                         sched: StaticSchedule) -> WCETReport:
+    """WCET report for an already-computed (subtasks, mapping, schedule).
 
+    The analysis half of `analyze`, factored out so callers that already
+    hold the pipeline artifacts — the staged pass pipeline in
+    `repro.compiler`, ablation sweeps re-scheduling one mapping — derive
+    the bound without re-running partition/map/schedule."""
     busy = sched.core_busy()
     per_op: dict[str, float] = {}
     by_id = {st.sid: st for st in subtasks}
@@ -102,7 +95,7 @@ def analyze(graph: Graph, hw: HardwareModel,
         op = by_id[slot.sid].op_name
         per_op[op] = per_op.get(op, 0.0) + (slot.end - slot.start)
 
-    report = WCETReport(
+    return WCETReport(
         graph_name=graph.name,
         hw_name=hw.name,
         num_cores=mapping.num_cores,
@@ -117,6 +110,29 @@ def analyze(graph: Graph, hw: HardwareModel,
         bytes_saved_reuse=sched.bytes_saved_reuse,
         per_op_wcet=per_op,
     )
+
+
+def analyze(graph: Graph, hw: HardwareModel,
+            num_cores: int | None = None,
+            mapping: Mapping | None = None,
+            arbitration: str = "static",
+            validate: bool = True) -> tuple[WCETReport, StaticSchedule,
+                                            list[Subtask], Mapping]:
+    """Full paper pipeline: partition -> map -> schedule -> WCET bound.
+
+    Equivalent to running the staged pass pipeline of `repro.compiler`
+    through its wcet stage; retained as the analysis-only entry point
+    (no params, no lowering — LM decode graphs with analysis-only op
+    kinds are fine here)."""
+    part = Partitioner(hw)
+    subtasks = part.partition(graph)
+    if mapping is None:
+        mapping = map_reverse_affinity(subtasks, hw, num_cores)
+    sched = compute_schedule(subtasks, mapping, hw, wcet=True,
+                             arbitration=arbitration)
+    if validate:
+        validate_schedule(sched, subtasks, mapping)
+    report = report_from_schedule(graph, hw, subtasks, mapping, sched)
     return report, sched, subtasks, mapping
 
 

@@ -17,6 +17,7 @@ these constants; they are the *same three terms* seen from opposite sides
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +49,20 @@ class HardwareModel:
     wcet_margin: float = 1.25        # multiplicative safety margin on bounds
 
     # Derived helpers -------------------------------------------------------
+    def fingerprint(self) -> str:
+        """Stable hash over every model constant.
+
+        Two HardwareModel instances with identical constants fingerprint
+        identically (the machine half of the compiled-artifact cache key);
+        any constant change — even the WCET margin — changes the
+        fingerprint, so a `Deployment` compiled for one machine refuses to
+        load against another (repro.compiler.Deployment.load).
+        """
+        h = hashlib.sha256()
+        for f in dataclasses.fields(self):
+            h.update(f"{f.name}={getattr(self, f.name)!r}\n".encode())
+        return h.hexdigest()[:16]
+
     def compute_time_s(self, flops: float, int8: bool = False) -> float:
         """Lower-bound execution time of `flops` on one worker."""
         peak = self.peak_ops_int8 if int8 else self.peak_flops_bf16

@@ -19,8 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.compiled import (compile_graph, jit_batched, pallas_batched,
-                             run_numpy)
+from ..compiler import compile as compile_deployment
 from ..core.graph import Graph
 from ..hw import HardwareModel, TPU_V5E
 from ..models.config import ModelConfig
@@ -37,34 +36,46 @@ class Request:
 
 
 class BatchedInferenceEngine:
-    """Batched CNN inference over the compiled schedule executor.
+    """Batched CNN inference over a compiled `repro.compiler.Deployment`.
 
-    The network is lowered once (`repro.core.compiled.compile_graph`, cached
-    per graph signature) and the whole program runs as one jitted JAX
-    function vmapped over the batch axis — the paper's static schedule
-    turned into a real batched serving step. ``backend="numpy"`` runs the
-    vectorized numpy replay per sample instead (no JAX tracing; useful for
-    small batches and as a cross-check). ``backend="pallas"`` serves through
-    the Pallas kernel lowering (`repro.core.compiled.pallas_batched`):
-    real Mosaic kernels on TPU, interpret mode elsewhere. All three are
+    The network is compiled once through `repro.compile` (deployment cache
+    keyed on graph signature + machine fingerprint + backend) and every
+    batch replays the deployment's batched runner from the backend
+    registry: ``"jax"`` (the whole program as one jitted function vmapped
+    over the batch axis — the paper's static schedule turned into a real
+    batched serving step), ``"numpy"`` (vectorized per-sample replay; no
+    JAX tracing), ``"pallas"`` (the Pallas kernel lowering: real Mosaic
+    kernels on TPU, interpret mode elsewhere), or any third-party backend
+    registered via `repro.compiler.register_backend`. All built-ins are
     bit-exact vs ``reference_forward``.
+
+    An engine can also be built straight from a saved artifact:
+    ``BatchedInferenceEngine.from_deployment(Deployment.load(path))``.
     """
 
     def __init__(self, graph: Graph, params: dict,
                  hw: HardwareModel = TPU_V5E,
-                 num_cores: int | None = None, backend: str = "jax"):
-        assert backend in ("jax", "numpy", "pallas")
+                 num_cores: int | None = None, backend: str = "jax",
+                 deployment=None):
         self.graph = graph
         self.params = params
         self.backend = backend
-        self.program = compile_graph(graph, params, hw, num_cores)
-        if backend == "jax":
-            self._fn = jit_batched(self.program)
-        elif backend == "pallas":
-            self._fn = pallas_batched(self.program)
-        else:
-            self._fn = None
+        if deployment is None:
+            deployment = compile_deployment(graph, hw, backend=backend,
+                                            params=params,
+                                            num_cores=num_cores)
+        self.deployment = deployment
+        self.program = deployment.program
+        self._fn = deployment.runner(batched=True, backend=backend)
         self.metrics = {"batches": 0, "samples": 0}
+
+    @classmethod
+    def from_deployment(cls, deployment, backend: str | None = None
+                        ) -> "BatchedInferenceEngine":
+        """Serve a precompiled (e.g. `Deployment.load`-ed) artifact."""
+        return cls(deployment.graph, None,
+                   backend=backend or deployment.backend,
+                   deployment=deployment)
 
     def infer(self, batch: dict[str, np.ndarray] | np.ndarray
               ) -> dict[str, np.ndarray]:
@@ -74,15 +85,7 @@ class BatchedInferenceEngine:
             (name,) = self.graph.inputs
             batch = {name: batch}
         B = next(iter(batch.values())).shape[0]
-        if self._fn is not None:
-            out = self._fn({k: jnp.asarray(v) for k, v in batch.items()})
-            res = {k: np.asarray(v) for k, v in out.items()}
-        else:
-            outs = [run_numpy(self.program,
-                              {k: v[b] for k, v in batch.items()})
-                    for b in range(B)]
-            res = {t: np.stack([o[t] for o in outs])
-                   for t in self.graph.outputs}
+        res = self._fn(batch)
         self.metrics["batches"] += 1
         self.metrics["samples"] += B
         return res

@@ -192,20 +192,24 @@ class MultiModelEngine:
                                   inputs_by_net: dict[str, dict] | None = None,
                                   backend: str = "numpy",
                                   seed: int = 0) -> dict[str, object]:
-        """Install compiled-schedule executors as step_fns for every
+        """Install compiled-deployment executors as step_fns for every
         registered network that doesn't have one.
 
-        Each network is lowered ONCE through the program cache
-        (`repro.core.compiled`) and every hyperperiod job instance of it
-        replays the same compiled program — jobs do real inference work at
-        compiled-executor speed instead of running a placeholder.
-        `backend` selects the replay path per engine: "numpy" (default),
-        "jax" (jitted+vmapped), or "pallas" (the Pallas kernel lowering;
-        interpret mode off-TPU). Missing params/inputs are synthesized
-        (`init_params` / random int8 frames). Networks with analysis-only
-        op kinds (LM decode graphs) are left untouched. Returns the
-        per-network engines for inspection.
+        Each network is compiled ONCE through `repro.compile` (deployment
+        cache keyed on graph signature + machine fingerprint + backend)
+        and every hyperperiod job instance of it replays the same
+        `Deployment` — jobs do real inference work at compiled-executor
+        speed instead of running a placeholder. `backend` names any
+        registered backend: "numpy" (default), "jax" (jitted+vmapped),
+        "pallas" (the Pallas kernel lowering; interpret mode off-TPU), or
+        a third-party `repro.compiler.register_backend` entry. Missing
+        params/inputs are synthesized (the compile pipeline's quantize
+        pass / random int8 frames). Networks with analysis-only op kinds
+        (LM decode graphs) are left untouched. Returns the per-network
+        `BatchedInferenceEngine`s for inspection (each exposing its
+        `.deployment`).
         """
+        from ..compiler import compile as compile_deployment
         from ..core.compiled import supports_graph
         params_by_net = params_by_net or {}
         inputs_by_net = inputs_by_net or {}
@@ -224,8 +228,11 @@ class MultiModelEngine:
                            size=(1,) + spec.graph.tensors[t].shape
                        ).astype(np.int8)
                        for t in spec.graph.inputs}
-            eng = BatchedInferenceEngine(spec.graph, params, self.hw,
-                                         self.num_cores, backend=backend)
+            dep = compile_deployment(spec.graph, self.hw, backend=backend,
+                                     params=params,
+                                     num_cores=self.num_cores,
+                                     arbitration=self.arbitration)
+            eng = BatchedInferenceEngine.from_deployment(dep)
             self.step_fns[spec.name] = (lambda e=eng, x=inp: e.infer(x))
             engines[spec.name] = eng
         self.executors.update(engines)

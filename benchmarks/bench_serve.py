@@ -1,0 +1,156 @@
+"""Sustained-serving benchmark: `repro.serve.Server` under mixed traffic.
+
+A mixed taskset — a CNN at 100 Hz (2 static batch slots) + an LM decode
+network at 50 Hz (step_fn-driven, analysis-only graph) — is registered
+through the admission-controlled front door and served for N hyperperiods
+of submitted requests on the numpy and jax backends. Reported per backend:
+
+  * sustained throughput (served tickets / wall second),
+  * request latency p50 / p99 (host wall time of the serving job),
+  * deadline miss rate from the shared `DeadlineMonitor`.
+
+CNN ticket outputs must be bit-exact across backends (`BackendMismatch`
+aborts the whole harness run, same policy as the executor benchmark), and
+an unschedulable smoke taskset is a hard failure — both are exactly what
+the CI serve-smoke step gates on. Emits ``BENCH_serve.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.core import cnn
+from repro.core.lmgraph import lm_decode_graph
+from repro.core.taskset import hyperperiod
+from repro.hw import scaled_paper_machine
+from repro.models.config import ModelConfig
+from repro.serve import Server
+
+from .bench_executor import BackendMismatch
+
+HW = scaled_paper_machine(8)
+CNN_SLOTS = 2
+CNN_PERIOD = 1 / 100
+LM_PERIOD = 1 / 50
+BACKENDS = ("numpy", "jax")
+
+
+def _lm_graph():
+    # swiglu gates emit "mul" ops (no compiled lowering): analysis-only
+    cfg = ModelConfig(name="bench_lm", family="dense", num_layers=2,
+                      d_model=256, num_heads=4, num_kv_heads=4, d_ff=512,
+                      vocab_size=4096, act="swiglu")
+    return lm_decode_graph(cfg, batch=1, cache_len=128)
+
+
+def _lm_step_fn(seed: int = 7):
+    """Deterministic stand-in decode step (the analysis-only LM graph has
+    no compiled lowering): one fixed-weight matmul per request."""
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((256, 256)).astype(np.float32)
+
+    def fn(payload):
+        x = np.full((256,), np.float32(payload), np.float32)
+        return w @ x
+    return fn
+
+
+def _serve_one_backend(backend: str, hyperperiods: int,
+                       cnn_frames: list, lm_tokens: list):
+    srv = Server(HW, backend=backend, num_cores=8, queue_capacity=256)
+    srv.register("cnn100", cnn.small_cnn(h=24, w=24), CNN_PERIOD,
+                 slots=CNN_SLOTS)
+    # register raises AdmissionError on an unschedulable taskset, which
+    # fails this section non-zero — exactly the CI serve-smoke gate
+    srv.register("lm50", _lm_graph(), LM_PERIOD, step_fn=_lm_step_fn())
+    cnn_jobs = round(srv.compiled.hyperperiod_s / CNN_PERIOD)
+    frame_it, tok_it = iter(cnn_frames), iter(lm_tokens)
+    # warmup hyperperiod: pay jit tracing outside the measured window, then
+    # reset the accounting (and the speed-ratio calibration, which would
+    # otherwise be anchored to the compile-laden first step)
+    for _ in range(CNN_SLOTS):
+        srv.submit("cnn100", next(frame_it))
+    srv.submit("lm50", next(tok_it))
+    srv.run(hyperperiods=1)
+    srv.monitor.reset(recalibrate=True)
+    tickets = []
+    wall0 = time.perf_counter()
+    for _ in range(hyperperiods):
+        # keep the queues exactly drained: slots * jobs CNN frames and one
+        # LM token per hyperperiod, submitted ahead of the releases
+        for _ in range(cnn_jobs * CNN_SLOTS):
+            tickets.append(srv.submit("cnn100", next(frame_it)))
+        tickets.append(srv.submit("lm50", next(tok_it)))
+        srv.run(hyperperiods=1)
+    wall = time.perf_counter() - wall0
+
+    done = [t for t in tickets if t.done]
+    if len(done) != len(tickets):
+        raise RuntimeError(f"{len(tickets) - len(done)} tickets left "
+                           f"unserved on backend {backend}")
+    lats = sorted(t.result().latency_s for t in done)
+    snap = srv.monitor.snapshot()
+    checks = sum(s["checks"] for s in snap["networks"].values())
+    misses = sum(s["misses"] for s in snap["networks"].values())
+    stats = {
+        "hyperperiods": hyperperiods,
+        "tickets": len(done),
+        "throughput_rps": len(done) / wall,
+        "p50_us": lats[len(lats) // 2] * 1e6,
+        "p99_us": lats[min(len(lats) - 1, int(len(lats) * 0.99))] * 1e6,
+        "miss_rate": misses / checks if checks else 0.0,
+        "wall_s": wall,
+    }
+    outputs = [t.result().output for t in done]
+    return stats, outputs
+
+
+def run(csv_rows: list, smoke: bool = False) -> None:
+    hyperperiods = 3 if smoke else 12
+    rng = np.random.default_rng(0)
+    cnn_jobs_per_hp = round(hyperperiod([CNN_PERIOD, LM_PERIOD])
+                            / CNN_PERIOD)
+    n_cnn = (hyperperiods + 1) * CNN_SLOTS * cnn_jobs_per_hp + 4
+    cnn_frames = [rng.integers(-64, 64, (24, 24, 3)).astype(np.int8)
+                  for _ in range(n_cnn)]
+    lm_tokens = list(range(hyperperiods + 4))
+
+    print(f"\n== Sustained serving: Server, mixed CNN@{1 / CNN_PERIOD:.0f}Hz"
+          f" (x{CNN_SLOTS} slots) + LM@{1 / LM_PERIOD:.0f}Hz, "
+          f"{hyperperiods} hyperperiods, {HW.name} ==")
+    print(f"{'backend':<10}{'tickets':>9}{'thr req/s':>12}{'p50 us':>10}"
+          f"{'p99 us':>10}{'miss rate':>11}")
+    results, outputs = {}, {}
+    for backend in BACKENDS:
+        stats, outs = _serve_one_backend(backend, hyperperiods,
+                                         cnn_frames, lm_tokens)
+        results[backend] = stats
+        outputs[backend] = outs
+        print(f"{backend:<10}{stats['tickets']:>9}"
+              f"{stats['throughput_rps']:>12.1f}{stats['p50_us']:>10.1f}"
+              f"{stats['p99_us']:>10.1f}{stats['miss_rate']:>11.2%}")
+        csv_rows.append((f"serve/{backend}", stats["p99_us"],
+                         f"thr_rps={stats['throughput_rps']:.1f};"
+                         f"miss={stats['miss_rate']:.4f}"))
+
+    ref = outputs[BACKENDS[0]]
+    for backend in BACKENDS[1:]:
+        got = outputs[backend]
+        for i, (a, b) in enumerate(zip(ref, got)):
+            a_d = a if isinstance(a, dict) else {"out": a}
+            b_d = b if isinstance(b, dict) else {"out": b}
+            for k in a_d:
+                if not np.array_equal(np.asarray(a_d[k]),
+                                      np.asarray(b_d[k])):
+                    raise BackendMismatch(
+                        f"serve: ticket {i} output {k!r} differs between "
+                        f"{BACKENDS[0]} and {backend}")
+    print(f"backends bit-exact across {len(ref)} served tickets: "
+          + ", ".join(BACKENDS))
+
+    with open("BENCH_serve.json", "w") as f:
+        json.dump({"machine": HW.name, "results": results}, f, indent=2)
+    print("wrote BENCH_serve.json")

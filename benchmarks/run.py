@@ -9,11 +9,14 @@
                   batched JAX, Pallas kernels); emits BENCH_executor.json
   bench_kernels   worker-core kernels (int8 GEMM / conv-im2col; §IV.A)
   bench_serving   per-token WCET for the assigned LM archs + engine
+  bench_serve     sustained Server throughput/latency/miss-rate for a mixed
+                  CNN+LM taskset on numpy+jax; emits BENCH_serve.json
   roofline        §Roofline table from the multi-pod dry-run artifacts
 
-``--smoke`` runs a fast subset (taskset sweep + executor backends) suitable
-for CI; the perf-smoke CI job additionally runs the executor benchmark as
-its own step to own the BENCH_executor.json artifact and the perf gate.
+``--smoke`` runs a fast subset (taskset sweep + executor backends + serve
+runtime) suitable for CI; ``--only name[,name...]`` restricts the run to
+the named sections (the CI perf-smoke job uses this to own the
+BENCH_executor.json perf gate and the serve-smoke step separately).
 
 Every section is timed: a ``== section <name>: ok|FAILED (wall s) ==``
 line is printed as it finishes, and a per-section wall-time table is
@@ -37,8 +40,16 @@ import traceback
 def main(argv: list[str] | None = None) -> None:
     argv = sys.argv[1:] if argv is None else argv
     smoke = "--smoke" in argv
+    only: set[str] | None = None
+    if "--only" in argv:
+        idx = argv.index("--only")
+        if idx + 1 >= len(argv):
+            print("--only requires a comma-separated section list",
+                  file=sys.stderr)
+            sys.exit(2)
+        only = set(argv[idx + 1].split(","))
     csv_rows: list[tuple] = []
-    from . import bench_executor, bench_taskset
+    from . import bench_executor, bench_serve, bench_taskset
     if smoke:
         # the executor section owns BENCH_executor.json: CI's perf-smoke
         # job runs this once, then gates the artifact with
@@ -46,6 +57,7 @@ def main(argv: list[str] | None = None) -> None:
         sections = [
             ("taskset", lambda: bench_taskset.run(csv_rows, smoke=True)),
             ("executor", lambda: bench_executor.run(csv_rows, smoke=True)),
+            ("serve", lambda: bench_serve.run(csv_rows, smoke=True)),
         ]
     else:
         from . import bench_wcet, bench_schedule, bench_kernels, \
@@ -58,8 +70,16 @@ def main(argv: list[str] | None = None) -> None:
             ("executor", lambda: bench_executor.run(csv_rows)),
             ("kernels", lambda: bench_kernels.run(csv_rows)),
             ("serving", lambda: bench_serving.run(csv_rows)),
+            ("serve", lambda: bench_serve.run(csv_rows)),
             ("roofline", lambda: roofline.run(csv_rows)),
         ]
+    if only is not None:
+        unknown = only - {name for name, _ in sections}
+        if unknown:
+            print(f"--only: unknown sections {sorted(unknown)} "
+                  f"(have: {[n for n, _ in sections]})", file=sys.stderr)
+            sys.exit(2)
+        sections = [(n, f) for n, f in sections if n in only]
     failed = []
     walls: list[tuple[str, float, str]] = []
     for name, fn in sections:

@@ -45,7 +45,10 @@ def main():
     for r in done[:3]:
         print(f"  req {r.rid}: -> {r.out}")
     print(f"engine metrics: {eng.metrics}")
+    # every decode step is individually timed and checked by the shared
+    # DeadlineMonitor (checks AND misses count per step)
     print(f"deadline misses: {eng.deadline_misses}/{eng.deadline_checks}")
+    print(eng.monitor.summary())
 
 
 if __name__ == "__main__":

@@ -19,8 +19,9 @@ See docs/api.md for the full tour.
 from .api import clear_deployment_cache, compile                # noqa: A004
 from .backends import (Backend, BackendError, get_backend, list_backends,
                        register_backend, unregister_backend)
-from .deployment import (ARTIFACT_FORMAT, ArtifactError, Deployment,
-                         TasksetDeployment)
+from .deployment import (ARTIFACT_FORMAT, BUNDLE_FORMAT, ArtifactError,
+                         Deployment, TasksetDeployment, load_bundle,
+                         save_bundle)
 from .pipeline import (DeadlineError, LowerPass, MapPass, PartitionPass,
                        Pass, PassContext, PassManager, PipelineError,
                        QuantizePass, SchedulePass, StageRecord, WCETPass,
@@ -29,6 +30,7 @@ from .pipeline import (DeadlineError, LowerPass, MapPass, PartitionPass,
 __all__ = [
     "compile", "clear_deployment_cache",
     "Deployment", "TasksetDeployment", "ArtifactError", "ARTIFACT_FORMAT",
+    "save_bundle", "load_bundle", "BUNDLE_FORMAT",
     "Backend", "BackendError", "register_backend", "unregister_backend",
     "get_backend", "list_backends",
     "Pass", "PassManager", "PassContext", "StageRecord", "default_passes",

@@ -32,7 +32,9 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import os
 import pickle
+import re
 import zipfile
 
 from ..core.compiled import CompiledProgram, graph_signature
@@ -219,6 +221,118 @@ class Deployment:
                 f"({sig}), refusing to deploy graph {graph.name} "
                 f"({graph_signature(graph)})")
         return dep
+
+
+# -- multi-network bundles ----------------------------------------------------
+#
+# A *bundle* composes several single-network artifacts (each a full
+# `Deployment.save` ZIP, individually validated on load) into one on-disk
+# directory, plus a manifest and optional side payloads — the unit a whole
+# serving configuration (`repro.serve.Server.save`) is shipped as.
+
+BUNDLE_FORMAT = 1
+BUNDLE_MANIFEST = "bundle.json"
+BUNDLE_OBJECTS = "objects.pkl"
+
+
+def _member_filename(index: int, name: str) -> str:
+    """Stable, filesystem-safe member file name (manifest maps it back)."""
+    safe = re.sub(r"[^A-Za-z0-9_.-]", "_", name) or "net"
+    return f"{index:02d}_{safe}.rtdep"
+
+
+def save_bundle(dirpath: str, deployments: dict[str, Deployment], *,
+                extra: dict | None = None, objects: object = None) -> str:
+    """Write a multi-network bundle directory. Returns `dirpath`.
+
+    Layout: `bundle.json` (manifest: format, member table with per-artifact
+    signatures/fingerprints, shared machine fingerprint, caller `extra`
+    JSON) + one `<nn>_<name>.rtdep` per deployment + optionally
+    `objects.pkl` (pickled caller payload, sha256-pinned in the manifest —
+    same trust model as the per-deployment payloads)."""
+    fps = {d.machine_fingerprint for d in deployments.values()}
+    if len(fps) > 1:
+        raise ArtifactError(
+            f"bundle members compiled for different machines: {sorted(fps)}")
+    os.makedirs(dirpath, exist_ok=True)
+    members = {}
+    for i, (name, dep) in enumerate(sorted(deployments.items())):
+        fname = _member_filename(i, name)
+        dep.save(os.path.join(dirpath, fname))
+        members[name] = {"file": fname,
+                         "graph_signature": dep.graph_signature,
+                         "machine_fingerprint": dep.machine_fingerprint,
+                         "backend": dep.backend,
+                         "wcet_total_s": dep.wcet_bound_s}
+    manifest = {"format": BUNDLE_FORMAT, "members": members,
+                "machine_fingerprint": next(iter(fps), None),
+                "extra": extra or {}}
+    if objects is not None:
+        blob = pickle.dumps(objects, protocol=pickle.HIGHEST_PROTOCOL)
+        manifest["objects_sha256"] = hashlib.sha256(blob).hexdigest()
+        with open(os.path.join(dirpath, BUNDLE_OBJECTS), "wb") as f:
+            f.write(blob)
+    with open(os.path.join(dirpath, BUNDLE_MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return dirpath
+
+
+def load_bundle(dirpath: str, *, machine: HardwareModel | None = None
+                ) -> tuple[dict[str, Deployment], dict, object]:
+    """Reload a bundle -> (deployments, extra, objects).
+
+    Every member goes through `Deployment.load` (full signature/fingerprint
+    validation, optionally against `machine`); the side payload's sha256 is
+    checked against the manifest before unpickling. Raises `ArtifactError`
+    on any stale, foreign, or corrupt piece."""
+    mpath = os.path.join(dirpath, BUNDLE_MANIFEST)
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise ArtifactError(f"{dirpath}: not a bundle ({e})") from e
+    if manifest.get("format") != BUNDLE_FORMAT:
+        raise ArtifactError(f"{dirpath}: unsupported bundle format "
+                            f"{manifest.get('format')!r} "
+                            f"(expected {BUNDLE_FORMAT})")
+    deployments = {}
+    for name, m in manifest.get("members", {}).items():
+        dep = Deployment.load(os.path.join(dirpath, m["file"]),
+                              machine=machine)
+        if dep.graph_signature != m.get("graph_signature"):
+            raise ArtifactError(
+                f"{dirpath}: member {name!r} signature drifted from the "
+                f"bundle manifest — stale bundle, re-save")
+        deployments[name] = dep
+    fps = {d.machine_fingerprint for d in deployments.values()}
+    if len(fps) > 1 or (fps and manifest.get("machine_fingerprint")
+                        not in fps):
+        raise ArtifactError(
+            f"{dirpath}: member machine fingerprints disagree with the "
+            f"manifest ({sorted(fps)} vs "
+            f"{manifest.get('machine_fingerprint')!r})")
+    objects = None
+    opath = os.path.join(dirpath, BUNDLE_OBJECTS)
+    if manifest.get("objects_sha256") is not None:
+        try:
+            with open(opath, "rb") as f:
+                blob = f.read()
+        except OSError as e:
+            raise ArtifactError(f"{dirpath}: missing {BUNDLE_OBJECTS} "
+                                f"({e})") from e
+        digest = hashlib.sha256(blob).hexdigest()
+        if digest != manifest["objects_sha256"]:
+            raise ArtifactError(
+                f"{dirpath}: {BUNDLE_OBJECTS} hash mismatch (manifest "
+                f"{manifest['objects_sha256']!r}, payload hashes to "
+                f"{digest}) — corrupt bundle")
+        try:
+            objects = pickle.loads(blob)
+        except (pickle.UnpicklingError, EOFError, AttributeError,
+                ModuleNotFoundError, ImportError) as e:
+            raise ArtifactError(f"{dirpath}: undecodable {BUNDLE_OBJECTS} "
+                                f"({e})") from e
+    return deployments, manifest.get("extra", {}), objects
 
 
 @dataclasses.dataclass

@@ -195,6 +195,25 @@ class TasksetReport:
         return self.fits_hyperperiod and all(n.schedulable
                                              for n in self.networks)
 
+    def verdict_of(self, network: str) -> NetworkVerdict:
+        """The per-network verdict by name (KeyError lists what exists)."""
+        for n in self.networks:
+            if n.name == network:
+                return n
+        raise KeyError(f"no network {network!r} in this taskset "
+                       f"(analyzed: {sorted(n.name for n in self.networks)})")
+
+    def bound(self, network: str) -> float:
+        """Per-job WCET response bound for `network` — the budget every job
+        of that network is held to at run time (serving runtime + engines
+        look bounds up here instead of re-deriving them)."""
+        return self.verdict_of(network).response_bound_s
+
+    @property
+    def response_bounds(self) -> dict[str, float]:
+        """All per-network response bounds, keyed by network name."""
+        return {n.name: n.response_bound_s for n in self.networks}
+
     def summary(self) -> str:
         lines = [
             f"Taskset[{len(self.networks)} nets on {self.hw_name} "

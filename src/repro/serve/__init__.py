@@ -1,10 +1,29 @@
-"""Serving substrate: batched engine + WCET-bounded predictable mode."""
+"""Serving substrate — fronted by ONE runtime: `repro.serve.Server`.
+
+    srv = Server(machine, backend="jax")
+    srv.register("net", graph, period_s=1/30)      # admission-controlled
+    ticket = srv.submit("net", frame)
+    srv.run(hyperperiods=3)
+    ticket.result()        # output + latency + WCET bound + deadline verdict
+
+`BatchedInferenceEngine` / `ServeEngine` / `PredictableEngine` /
+`MultiModelEngine` remain as thin wrappers (batched CNN inference, LM
+prefill/decode, per-step WCET enforcement, the historical taskset
+adapter) — all deadline accounting lives in `DeadlineMonitor`, all
+multi-network execution in `Server`. See docs/serving.md.
+"""
 
 from .engine import BatchedInferenceEngine, Request, ServeEngine
+from .monitor import DeadlineMonitor, DeadlineVerdict
 from .predictable import (AdmissionError, MultiModelEngine,
                           PredictableEngine, PredictableServeReport,
                           analyze_decode)
+from .runtime import (BackpressureError, RequestQueue, ServeError, Server,
+                      Ticket, TicketResult)
 
-__all__ = ["BatchedInferenceEngine", "Request", "ServeEngine",
+__all__ = ["Server", "Ticket", "TicketResult", "RequestQueue",
+           "ServeError", "AdmissionError", "BackpressureError",
+           "DeadlineMonitor", "DeadlineVerdict",
+           "BatchedInferenceEngine", "Request", "ServeEngine",
            "PredictableEngine", "PredictableServeReport", "analyze_decode",
-           "MultiModelEngine", "AdmissionError"]
+           "MultiModelEngine"]

@@ -14,6 +14,7 @@ refilled on the next prefill flush (simple continuous batching).
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -131,13 +132,21 @@ class ServeEngine:
             if r.rid >= 0 and r.max_new_tokens > 0:
                 r.out.append(int(t))
         for step in range(1, max_new):
+            t0 = time.perf_counter()
             logits, cache = self._decode(self.params, cache, tok[:, None])
             self.metrics["decode_steps"] += 1
             tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-            for r, t in zip(requests, np.asarray(tok)):
+            tok_host = np.asarray(tok)           # sync: result materialized
+            self._record_decode_step(time.perf_counter() - t0)
+            for r, t in zip(requests, tok_host):
                 if r.rid >= 0 and len(r.out) < r.max_new_tokens:
                     r.out.append(int(t))
                     self.metrics["tokens"] += 1
         for r in requests:
             r.done = True
         return [r for r in requests if r.rid >= 0]
+
+    def _record_decode_step(self, dt_s: float) -> None:
+        """Per-decode-step timing hook (each step individually, measured at
+        its sync point). `PredictableEngine` overrides this to feed the
+        `DeadlineMonitor`; the base engine keeps no deadline state."""

@@ -1,0 +1,196 @@
+"""Deadline telemetry: the ONE place run-time deadline accounting lives.
+
+Every serving surface in this repo enforces the same scheme — a WCET bound
+from the compiler pipeline, scaled into wall-clock time by a measured (or
+pinned) machine-speed ratio, with a slack factor for host jitter — but it
+used to be re-implemented inline by `PredictableEngine.generate` and
+`MultiModelEngine.run_hyperperiod`, each with its own calibration and its
+own counters.  `DeadlineMonitor` extracts that logic once:
+
+  * **calibration** — the ratio between host wall time and modeled machine
+    time is measured on the first real execution (latency / bound) unless
+    pinned up front (`speed_ratio=` / `pin()`), so deadline budgets are
+    meaningful on any host without configuration;
+  * **accounting** — per-network check/miss counters, a bounded latency
+    reservoir for percentiles, and log2-bucket latency histograms;
+  * **verdicts** — `check()` returns a `DeadlineVerdict` (count-affecting),
+    `judge()` the same verdict without touching the counters (used for
+    per-request deadlines layered on top of the schedule-level check);
+  * **telemetry** — `snapshot()` (machine-readable) and `summary()`
+    (human-readable table).
+
+"Designing Neural Networks for Real-Time Systems" (Pearce et al., 2020)
+motivates keeping the per-inference deadline verdict a first-class output
+rather than a log line; this module is that output's single source.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+
+
+@dataclasses.dataclass(frozen=True)
+class DeadlineVerdict:
+    """One deadline decision: did this execution meet its budget?
+
+    `response_bound_s` and `deadline_s` are in *modeled machine* seconds
+    (the compiler's time base); `latency_s` and `budget_s` are host
+    wall-clock seconds — `budget_s = deadline_s * speed_ratio * slack`.
+    """
+
+    network: str
+    latency_s: float                 # measured host wall time
+    response_bound_s: float          # WCET response bound (model time)
+    deadline_s: float                # effective deadline (model time)
+    budget_s: float                  # wall-clock budget the latency is held to
+    met: bool
+
+    @property
+    def missed(self) -> bool:
+        return not self.met
+
+
+class DeadlineMonitor:
+    """Speed-ratio calibration + per-network deadline accounting.
+
+    One monitor instance is shared by everything that times executions of
+    the same serving surface, so the calibration is done once and the
+    counters compose across networks.
+    """
+
+    def __init__(self, speed_ratio: float | None = None,
+                 slack_factor: float = 1.5, max_samples: int = 4096):
+        self.slack_factor = slack_factor
+        self.max_samples = max_samples
+        self._ratio = speed_ratio
+        self.pinned = speed_ratio is not None    # configured vs measured
+        self.checks: dict[str, int] = {}
+        self.misses: dict[str, int] = {}
+        self._lat: dict[str, deque] = {}
+        self._hist: dict[str, dict[int, int]] = {}
+
+    # -- calibration ---------------------------------------------------------
+    @property
+    def speed_ratio(self) -> float | None:
+        """Host-seconds per modeled-machine-second; None until calibrated."""
+        return self._ratio
+
+    def pin(self, speed_ratio: float | None) -> None:
+        """Pin the speed ratio (None re-arms calibration on the next check)."""
+        self._ratio = speed_ratio
+        self.pinned = speed_ratio is not None
+
+    def calibrate(self, latency_s: float, bound_s: float) -> float:
+        """Set the ratio from one real measurement if not already known."""
+        if self._ratio is None:
+            self._ratio = latency_s / max(bound_s, 1e-12)
+        return self._ratio
+
+    def reset(self, *, recalibrate: bool = False) -> None:
+        """Zero all counters/histograms (e.g. after a warmup phase).
+        recalibrate=True also forgets a measured (not pinned) ratio."""
+        self.checks.clear()
+        self.misses.clear()
+        self._lat.clear()
+        self._hist.clear()
+        if recalibrate and not self.pinned:
+            self._ratio = None
+
+    def budget(self, deadline_s: float) -> float | None:
+        """Wall-clock budget for a model-time deadline; None if uncalibrated."""
+        if self._ratio is None:
+            return None
+        return deadline_s * self._ratio * self.slack_factor
+
+    # -- verdicts ------------------------------------------------------------
+    def judge(self, network: str, latency_s: float, bound_s: float,
+              deadline_s: float | None = None) -> DeadlineVerdict:
+        """Verdict WITHOUT counting — for per-request deadlines layered on
+        top of the schedule-level `check`. Calibrates if needed (against the
+        response bound, never the request deadline)."""
+        ratio = self.calibrate(latency_s, bound_s)
+        deadline = bound_s if deadline_s is None else deadline_s
+        budget = deadline * ratio * self.slack_factor
+        return DeadlineVerdict(network=network, latency_s=latency_s,
+                               response_bound_s=bound_s, deadline_s=deadline,
+                               budget_s=budget, met=latency_s <= budget)
+
+    def check(self, network: str, latency_s: float, bound_s: float,
+              deadline_s: float | None = None) -> DeadlineVerdict:
+        """Count one enforcement check for `network` and return the verdict.
+
+        Default deadline is the WCET response bound itself (the paper's
+        enforcement: actual time must stay within the scaled bound)."""
+        v = self.judge(network, latency_s, bound_s, deadline_s)
+        self.checks[network] = self.checks.get(network, 0) + 1
+        if not v.met:
+            self.misses[network] = self.misses.get(network, 0) + 1
+        lat = self._lat.setdefault(network, deque(maxlen=self.max_samples))
+        lat.append(latency_s)
+        bucket = self._bucket(latency_s)
+        hist = self._hist.setdefault(network, {})
+        hist[bucket] = hist.get(bucket, 0) + 1
+        return v
+
+    # -- telemetry -----------------------------------------------------------
+    @staticmethod
+    def _bucket(latency_s: float) -> int:
+        """log2 bucket index over microseconds (bucket b covers
+        [2^b, 2^(b+1)) us); 0 collects everything below 1 us."""
+        us = latency_s * 1e6
+        return max(0, int(math.floor(math.log2(us)))) if us >= 1.0 else 0
+
+    @staticmethod
+    def bucket_label(bucket: int) -> str:
+        return f"[{2 ** bucket}us,{2 ** (bucket + 1)}us)"
+
+    @staticmethod
+    def _percentile(sorted_vals: list[float], q: float) -> float:
+        if not sorted_vals:
+            return 0.0
+        idx = min(len(sorted_vals) - 1,
+                  max(0, math.ceil(q * len(sorted_vals)) - 1))
+        return sorted_vals[idx]
+
+    def miss_rate(self, network: str) -> float:
+        checks = self.checks.get(network, 0)
+        return self.misses.get(network, 0) / checks if checks else 0.0
+
+    def snapshot(self) -> dict:
+        """Machine-readable telemetry: calibration + per-network stats."""
+        networks = {}
+        for name in self.checks:
+            vals = sorted(self._lat.get(name, ()))
+            networks[name] = {
+                "checks": self.checks.get(name, 0),
+                "misses": self.misses.get(name, 0),
+                "miss_rate": self.miss_rate(name),
+                "p50_s": self._percentile(vals, 0.50),
+                "p99_s": self._percentile(vals, 0.99),
+                "max_s": vals[-1] if vals else 0.0,
+                "mean_s": sum(vals) / len(vals) if vals else 0.0,
+                "histogram": {self.bucket_label(b): c for b, c in
+                              sorted(self._hist.get(name, {}).items())},
+            }
+        return {"speed_ratio": self._ratio,
+                "slack_factor": self.slack_factor,
+                "networks": networks}
+
+    def summary(self) -> str:
+        snap = self.snapshot()
+        ratio = snap["speed_ratio"]
+        lines = [f"DeadlineMonitor[speed_ratio="
+                 f"{'uncalibrated' if ratio is None else f'{ratio:.3g}'}, "
+                 f"slack x{self.slack_factor:g}]"]
+        for name, s in sorted(snap["networks"].items()):
+            lines.append(
+                f"  {name:<14} checks={s['checks']:<6} "
+                f"misses={s['misses']:<5} ({s['miss_rate']:.1%})  "
+                f"p50={s['p50_s'] * 1e3:.3f} ms  "
+                f"p99={s['p99_s'] * 1e3:.3f} ms  "
+                f"max={s['max_s'] * 1e3:.3f} ms")
+        if len(lines) == 1:
+            lines.append("  (no checks recorded)")
+        return "\n".join(lines)

@@ -1,35 +1,39 @@
-"""Paper-mode serving: the ServeEngine wrapped with the static-schedule /
-WCET pipeline of repro.core.
+"""Paper-mode serving wrappers over the unified runtime.
 
-For a given (arch, batch, cache_len) the decode step is compiled by the
-paper's pipeline into a per-token WCET bound; the engine then enforces it
-as a deadline: every decode step is timed against the bound scaled by the
-machine-speed ratio, and violations are reported as stragglers — this is
-the real-time guarantee of the paper made operational for LM serving.
+Historically this module implemented deadline accounting and machine-speed
+calibration inline (twice — once per engine). Both now live in ONE place
+(`repro.serve.monitor.DeadlineMonitor`) behind ONE runtime
+(`repro.serve.runtime.Server`); the classes here are the retained thin
+entry points:
 
-`MultiModelEngine` extends this to a *taskset* of models sharing one
-machine: each model (a CNN graph or an LM decode step) is registered with
-a period/deadline, admission control runs the hyperperiod analysis
-(`repro.core.wcet.analyze_taskset`), and job execution over a hyperperiod
-is timed against the per-network response bounds.
+  * `PredictableEngine` — `ServeEngine` whose every decode step is timed
+    individually against the per-token WCET bound from the paper pipeline
+    (checks AND misses count per step, so the miss rate is no longer
+    structurally understated);
+  * `MultiModelEngine` — the taskset-of-models adapter: registration,
+    admission control, executor attachment and hyperperiod execution all
+    delegate to a private `Server`, keeping the historical call surface
+    (`add_graph`/`admit_graph`/`run_hyperperiod`/...) intact.
+
+New code should use `repro.serve.Server` directly — it adds request
+queues, tickets with per-request deadline verdicts, sustained
+multi-hyperperiod operation, and serving bundles.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable
 
-import numpy as np
-
-from ..core.executor import init_params
 from ..core.graph import Graph
 from ..core.lmgraph import lm_decode_graph
 from ..core.taskset import CompiledTaskset, NetworkSpec
-from ..core.wcet import analyze, analyze_taskset, TasksetReport, WCETReport
+from ..core.wcet import TasksetReport, WCETReport, analyze
 from ..hw import HardwareModel, TPU_V5E
 from ..models.config import ModelConfig
-from .engine import BatchedInferenceEngine, Request, ServeEngine
+from .engine import Request, ServeEngine                      # noqa: F401
+from .monitor import DeadlineMonitor
+from .runtime import AdmissionError, Server                   # noqa: F401
 
 
 @dataclasses.dataclass
@@ -67,53 +71,44 @@ def analyze_decode(cfg: ModelConfig, batch: int, cache_len: int,
 
 
 class PredictableEngine(ServeEngine):
-    """ServeEngine + per-step WCET deadline accounting."""
+    """ServeEngine + per-step WCET deadline accounting.
+
+    Each decode step is timed at its sync point and checked by the shared
+    `DeadlineMonitor` against the per-token WCET bound scaled by the
+    machine-speed ratio (measured on the first step unless pinned).
+    `deadline_checks`/`deadline_misses` both count per step."""
 
     def __init__(self, cfg: ModelConfig, params, batch_size: int = 4,
                  max_len: int = 256, hw: HardwareModel = TPU_V5E,
-                 speed_ratio: float | None = None, **kw):
+                 speed_ratio: float | None = None,
+                 slack_factor: float = 1.5, **kw):
         super().__init__(cfg, params, batch_size, max_len, **kw)
         self.report = analyze_decode(cfg, batch_size, max_len, hw)
-        # CPU-simulation speed vs the modeled machine: measured on the
-        # first decode step unless pinned
-        self._speed_ratio = speed_ratio
-        self.deadline_misses = 0
-        self.deadline_checks = 0
+        self.monitor = DeadlineMonitor(speed_ratio=speed_ratio,
+                                       slack_factor=slack_factor)
 
-    def generate(self, requests: list[Request]) -> list[Request]:
-        t0 = time.perf_counter()
-        out = super().generate(requests)
-        dt = time.perf_counter() - t0
-        steps = max(1, self.metrics["decode_steps"])
-        per_step = dt / steps
-        if self._speed_ratio is None:
-            self._speed_ratio = per_step / max(
-                self.report.per_token_wcet_s, 1e-12)
-        deadline = self.report.per_token_wcet_s * self._speed_ratio * 1.5
-        self.deadline_checks += steps
-        if per_step > deadline:
-            self.deadline_misses += 1
-        return out
+    def _record_decode_step(self, dt_s: float) -> None:
+        self.monitor.check("decode", dt_s, self.report.per_token_wcet_s)
 
+    @property
+    def deadline_checks(self) -> int:
+        return self.monitor.checks.get("decode", 0)
 
-class AdmissionError(RuntimeError):
-    """Raised when a model cannot be admitted without breaking deadlines."""
+    @property
+    def deadline_misses(self) -> int:
+        return self.monitor.misses.get("decode", 0)
 
 
 class MultiModelEngine:
-    """Deadline-enforcing multi-model serving on one shared machine.
+    """Deadline-enforcing multi-model serving on one shared machine — the
+    historical adapter over `repro.serve.Server`.
 
     Networks (CNN inference graphs, LM decode steps) are registered with a
-    period and an optional deadline; `compile()` runs the hyperperiod
-    analysis and `admit_*` variants reject a network whose addition would
-    make the taskset unschedulable (the previously-admitted set is kept).
-
-    `run_hyperperiod()` executes one hyperperiod's job sequence in release
-    order: each job runs its registered `step_fn` (e.g. a ServeEngine
-    decode or a compiled CNN forward) and its wall time is checked against
-    the network's WCET response bound scaled by the measured machine-speed
-    ratio — the same enforcement scheme as `PredictableEngine`, lifted to
-    many models.
+    period/deadline; `compile()` runs the hyperperiod analysis; `admit_*`
+    reject additions that would break schedulability (atomic rollback);
+    `run_hyperperiod()` executes one hyperperiod of jobs in release order
+    with deadline accounting. All of it delegates to the unified runtime;
+    the engine only keeps the original call/return conventions.
     """
 
     def __init__(self, hw: HardwareModel = TPU_V5E,
@@ -122,23 +117,45 @@ class MultiModelEngine:
         self.hw = hw
         self.num_cores = num_cores
         self.arbitration = arbitration
-        self.specs: list[NetworkSpec] = []
-        self.step_fns: dict[str, Callable[[], object] | None] = {}
-        self.report: TasksetReport | None = None
-        self.compiled: CompiledTaskset | None = None
-        self.deadline_misses: dict[str, int] = {}
-        self.deadline_checks: dict[str, int] = {}
-        self.executors: dict[str, object] = {}
-        self._speed_ratio: float | None = None
+        self.server = Server(hw, backend="numpy", num_cores=num_cores,
+                             arbitration=arbitration)
+
+    # -- delegated state (historical attribute surface) ----------------------
+    @property
+    def specs(self) -> list[NetworkSpec]:
+        return self.server.specs
+
+    @property
+    def step_fns(self) -> dict[str, Callable | None]:
+        return {n: st.step_fn for n, st in self.server._nets.items()}
+
+    @property
+    def report(self) -> TasksetReport | None:
+        return self.server.report
+
+    @property
+    def compiled(self) -> CompiledTaskset | None:
+        return self.server.compiled
+
+    @property
+    def executors(self) -> dict[str, object]:
+        return self.server.executors
+
+    @property
+    def deadline_checks(self) -> dict[str, int]:
+        return dict(self.server.monitor.checks)
+
+    @property
+    def deadline_misses(self) -> dict[str, int]:
+        return dict(self.server.monitor.misses)
 
     # -- registration --------------------------------------------------------
     def add_graph(self, name: str, graph: Graph, period_s: float,
                   deadline_s: float | None = None,
                   step_fn: Callable[[], object] | None = None) -> None:
-        """Register a network without (re)compiling."""
-        self.specs.append(NetworkSpec(name, graph, period_s, deadline_s))
-        self.step_fns[name] = step_fn
-        self.report = None                      # invalidate stale analysis
+        """Register a network without (re)compiling or admission control."""
+        self.server.add(name, graph, period_s, deadline_s, step_fn=step_fn,
+                        autorun=True)
 
     def add_model(self, name: str, cfg: ModelConfig, period_s: float,
                   batch: int = 1, cache_len: int = 256,
@@ -150,20 +167,27 @@ class MultiModelEngine:
         max_layers truncates very deep stacks for tractable schedule
         construction (the analyzed job is the truncated decode step; pass
         None to analyze the full depth)."""
-        L = (min(cfg.num_layers, max_layers) if max_layers is not None
-             else cfg.num_layers)
-        g = lm_decode_graph(cfg, batch, cache_len, layers=L)
-        self.add_graph(name, g, period_s, deadline_s, step_fn)
+        self.server.add(name, cfg, period_s, deadline_s, step_fn=step_fn,
+                        autorun=True, batch=batch, cache_len=cache_len,
+                        max_layers=max_layers)
 
     # -- admission control ---------------------------------------------------
     def compile(self) -> TasksetReport:
         """Hyperperiod analysis of the currently registered taskset."""
-        if not self.specs:
-            raise AdmissionError("no networks registered")
-        self.report, self.compiled = analyze_taskset(
-            self.specs, self.hw, self.num_cores,
-            arbitration=self.arbitration)
-        return self.report
+        return self.server.analyze()
+
+    def _admit(self, name: str, net, period_s: float,
+               deadline_s: float | None, step_fn: Callable | None,
+               **kw) -> bool:
+        try:
+            self.server.register(name, net, period_s, deadline_s,
+                                 step_fn=step_fn, **kw)
+        except AdmissionError as e:
+            if e.report is not None:         # analyzed but unschedulable
+                return False
+            raise
+        self.server._nets[name].autorun = True
+        return True
 
     def admit_graph(self, name: str, graph: Graph, period_s: float,
                     deadline_s: float | None = None,
@@ -173,18 +197,20 @@ class MultiModelEngine:
         On rejection — or on any compile error (duplicate name, graph that
         doesn't partition, ...) — the previously admitted set and its
         analysis are restored untouched."""
-        prev = (list(self.specs), dict(self.step_fns),
-                self.report, self.compiled)
-        self.add_graph(name, graph, period_s, deadline_s, step_fn)
-        try:
-            report = self.compile()
-        except Exception:
-            self.specs, self.step_fns, self.report, self.compiled = prev
-            raise
-        if not report.schedulable:
-            self.specs, self.step_fns, self.report, self.compiled = prev
-            return False
-        return True
+        return self._admit(name, graph, period_s, deadline_s, step_fn)
+
+    def admit_model(self, name: str, cfg: ModelConfig, period_s: float,
+                    batch: int = 1, cache_len: int = 256,
+                    max_layers: int | None = 4,
+                    deadline_s: float | None = None,
+                    step_fn: Callable[[], object] | None = None) -> bool:
+        """`admit_graph` for an LM architecture: the `ModelConfig` is
+        lowered to one decode step (like `add_model`) and admitted through
+        the same atomic-rollback hyperperiod analysis — LM models no longer
+        have to enter unchecked via `add_model`."""
+        return self._admit(name, cfg, period_s, deadline_s, step_fn,
+                           batch=batch, cache_len=cache_len,
+                           max_layers=max_layers)
 
     # -- compiled execution --------------------------------------------------
     def attach_compiled_executors(self,
@@ -198,45 +224,13 @@ class MultiModelEngine:
         Each network is compiled ONCE through `repro.compile` (deployment
         cache keyed on graph signature + machine fingerprint + backend)
         and every hyperperiod job instance of it replays the same
-        `Deployment` — jobs do real inference work at compiled-executor
-        speed instead of running a placeholder. `backend` names any
-        registered backend: "numpy" (default), "jax" (jitted+vmapped),
-        "pallas" (the Pallas kernel lowering; interpret mode off-TPU), or
-        a third-party `repro.compiler.register_backend` entry. Missing
-        params/inputs are synthesized (the compile pipeline's quantize
-        pass / random int8 frames). Networks with analysis-only op kinds
-        (LM decode graphs) are left untouched. Returns the per-network
-        `BatchedInferenceEngine`s for inspection (each exposing its
-        `.deployment`).
-        """
-        from ..compiler import compile as compile_deployment
-        from ..core.compiled import supports_graph
-        params_by_net = params_by_net or {}
-        inputs_by_net = inputs_by_net or {}
-        engines: dict[str, object] = {}
-        rng = np.random.default_rng(seed)
-        for spec in self.specs:
-            if self.step_fns.get(spec.name) is not None:
-                continue
-            if not supports_graph(spec.graph):
-                continue
-            params = params_by_net.get(spec.name) or init_params(spec.graph)
-            inp = inputs_by_net.get(spec.name)
-            if inp is None:
-                inp = {t: rng.integers(
-                           -64, 64,
-                           size=(1,) + spec.graph.tensors[t].shape
-                       ).astype(np.int8)
-                       for t in spec.graph.inputs}
-            dep = compile_deployment(spec.graph, self.hw, backend=backend,
-                                     params=params,
-                                     num_cores=self.num_cores,
-                                     arbitration=self.arbitration)
-            eng = BatchedInferenceEngine.from_deployment(dep)
-            self.step_fns[spec.name] = (lambda e=eng, x=inp: e.infer(x))
-            engines[spec.name] = eng
-        self.executors.update(engines)
-        return engines
+        `Deployment`. `backend` names any registered backend ("numpy",
+        "jax", "pallas", or a third-party entry); missing params/inputs are
+        synthesized. Networks with analysis-only op kinds (LM decode
+        graphs) are left untouched. Returns the per-network
+        `BatchedInferenceEngine`s (each exposing its `.deployment`)."""
+        return self.server.attach_executors(params_by_net, inputs_by_net,
+                                            backend=backend, seed=seed)
 
     # -- execution -----------------------------------------------------------
     def run_hyperperiod(self, speed_ratio: float | None = None,
@@ -247,26 +241,11 @@ class MultiModelEngine:
         The machine-speed ratio is calibrated on the first job that runs a
         real step_fn (a no-op placeholder must not set the budget scale);
         jobs without a step_fn are executed for ordering but not checked."""
-        if self.report is None:
+        if self.server.report is None:
             self.compile()
-        bounds = {n.name: n.response_bound_s for n in self.report.networks}
-        self._speed_ratio = speed_ratio
-        for job in self.compiled.jobs:
-            fn = self.step_fns.get(job.network)
-            t0 = time.perf_counter()
-            if fn is not None:
-                fn()
-            dt = time.perf_counter() - t0
-            if fn is None:
-                continue
-            if self._speed_ratio is None:
-                self._speed_ratio = dt / max(bounds[job.network], 1e-12)
-            budget = bounds[job.network] * self._speed_ratio * slack_factor
-            self.deadline_checks[job.network] = \
-                self.deadline_checks.get(job.network, 0) + 1
-            if dt > budget:
-                self.deadline_misses[job.network] = \
-                    self.deadline_misses.get(job.network, 0) + 1
-        return {"misses": dict(self.deadline_misses),
-                "checks": dict(self.deadline_checks),
-                "speed_ratio": self._speed_ratio}
+        mon = self.server.monitor
+        mon.pin(speed_ratio)
+        mon.slack_factor = slack_factor
+        self.server.run(hyperperiods=1, restart=True)
+        return {"misses": dict(mon.misses), "checks": dict(mon.checks),
+                "speed_ratio": mon.speed_ratio}

@@ -1,0 +1,678 @@
+"""`repro.serve.Server` — the one front door of the serving layer.
+
+What `repro.compile` is to the compiler pipeline, `Server` is to serving:
+every way this repo executes compiled networks against traffic — batched
+CNN inference, WCET-deadline-enforced LM decode, multi-network hyperperiod
+tasksets — goes through one object with one lifecycle:
+
+    srv = Server(machine, backend="jax")
+    srv.register("detector", yolo_graph, period_s=1/30)     # admission-checked
+    srv.register("speech", speech_cfg, period_s=1/10,       # a ModelConfig
+                 step_fn=decode_fn)                          # analysis-only net
+    t = srv.submit("detector", frame)                        # -> Ticket
+    srv.run(hyperperiods=3)                                  # release order
+    r = t.result()          # output + latency + bound + deadline verdict
+    srv.save("fleet.bundle")                                 # AOT artifact dir
+
+The pieces, mirroring the paper's deployment story:
+
+  * **admission** — `register` runs the hyperperiod analysis
+    (`repro.core.wcet.analyze_taskset`) over the extended taskset and
+    atomically rolls the server back if the addition is unschedulable or
+    fails to compile: the previously admitted set keeps serving untouched.
+  * **request queues** — each network gets a bounded `RequestQueue` with a
+    backpressure policy ("reject" raises at `submit`, "drop-oldest" evicts
+    the stalest ticket), feeding static batch slots (`slots=`): the
+    deployment's batched runner is always invoked at the fixed slot count
+    (short batches are zero-padded and masked out), so serving keeps the
+    fixed shapes the WCET machinery was computed for.
+  * **release-order execution** — `step()` executes the next job of the
+    compiled hyperperiod program; `run()` continues across hyperperiod
+    boundaries (the job cursor wraps, releases accumulate absolute time),
+    generalizing `MultiModelEngine.run_hyperperiod` to sustained operation
+    the way JetStream's orchestrator drives its batched slots.
+  * **deadline telemetry** — one shared `DeadlineMonitor` calibrates the
+    machine-speed ratio and accounts per-network checks/misses/histograms;
+    every `Ticket` carries its own `DeadlineVerdict`.
+  * **bundles** — `save(dir)`/`Server.load(dir)` compose the per-network
+    `Deployment` artifacts (PR-4 format) plus the taskset metadata into one
+    multi-network bundle, so a whole serving configuration is ahead-of-time
+    compilable and redeployable bit-exactly.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import itertools
+import math
+import time
+from collections import deque
+from typing import Callable
+
+import numpy as np
+
+from ..core.graph import Graph
+from ..core.lmgraph import lm_decode_graph
+from ..core.taskset import Job, NetworkSpec
+from ..core.wcet import NetworkVerdict, TasksetReport, analyze_taskset
+from ..hw import HardwareModel
+from ..models.config import ModelConfig
+from .monitor import DeadlineMonitor, DeadlineVerdict
+
+
+class ServeError(RuntimeError):
+    """Invalid serving-runtime usage (unknown network, pending ticket, ...)."""
+
+
+class AdmissionError(ServeError):
+    """Raised when a network cannot be admitted without breaking deadlines.
+
+    When the rejection is an unschedulable analysis (rather than a compile
+    failure), the offending `TasksetReport` is attached as `.report`."""
+
+    def __init__(self, msg: str, report: TasksetReport | None = None):
+        super().__init__(msg)
+        self.report = report
+
+
+class BackpressureError(ServeError):
+    """A bounded request queue is full under the "reject" policy."""
+
+
+# -- tickets ------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TicketResult:
+    """What a finished request carries: the output plus the real-time
+    accounting the paper's pipeline makes possible per request."""
+
+    output: object                       # {output_name: array} or step_fn value
+    latency_s: float                     # host wall time of the serving job
+    response_bound_s: float              # compiled WCET response bound
+    verdict: DeadlineVerdict             # per-request deadline verdict
+    release_s: float                     # absolute model-time job release
+
+    @property
+    def deadline_met(self) -> bool:
+        return self.verdict.met
+
+
+@dataclasses.dataclass
+class Ticket:
+    """Handle for one submitted request.
+
+    Status: "queued" (waiting for its network's next job slot), "done"
+    (result available), "dropped" (evicted under the drop-oldest policy),
+    "failed" (the serving job raised; `error` holds the message)."""
+
+    tid: int
+    network: str
+    payload: object
+    deadline_s: float | None = None      # per-request deadline (model time)
+    status: str = "queued"
+    error: str | None = None
+    _result: TicketResult | None = dataclasses.field(default=None, repr=False)
+
+    @property
+    def done(self) -> bool:
+        return self.status == "done"
+
+    def result(self) -> TicketResult:
+        if self._result is None:
+            raise ServeError(f"ticket {self.tid} ({self.network}) is "
+                             f"{self.status}"
+                             + (f": {self.error}" if self.error else "")
+                             + "; no result available")
+        return self._result
+
+
+# -- request queues -----------------------------------------------------------
+
+class RequestQueue:
+    """Bounded FIFO of tickets for one network.
+
+    policy="reject": `push` raises `BackpressureError` when full (the caller
+    owns retry/shed). policy="drop-oldest": the stalest queued ticket is
+    evicted (marked "dropped") to make room — freshest-data semantics for
+    periodic sensor-style traffic."""
+
+    POLICIES = ("reject", "drop-oldest")
+
+    def __init__(self, network: str, capacity: int = 64,
+                 policy: str = "reject"):
+        if capacity < 1:
+            raise ValueError(f"queue capacity must be >= 1, got {capacity}")
+        if policy not in self.POLICIES:
+            raise ValueError(f"unknown queue policy {policy!r} "
+                             f"(choose from {self.POLICIES})")
+        self.network = network
+        self.capacity = capacity
+        self.policy = policy
+        self.dropped = 0
+        self._q: deque[Ticket] = deque()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def push(self, ticket: Ticket) -> Ticket | None:
+        """Enqueue; returns the evicted ticket under drop-oldest (else
+        None). Raises `BackpressureError` when full under reject."""
+        evicted = None
+        if len(self._q) >= self.capacity:
+            if self.policy == "reject":
+                raise BackpressureError(
+                    f"queue for {self.network!r} is full "
+                    f"({self.capacity}); rejecting ticket {ticket.tid}")
+            evicted = self._q.popleft()
+            evicted.status = "dropped"
+            self.dropped += 1
+        self._q.append(ticket)
+        return evicted
+
+    def pop_upto(self, k: int) -> list[Ticket]:
+        out = []
+        while self._q and len(out) < k:
+            out.append(self._q.popleft())
+        return out
+
+
+# -- the server ---------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Network:
+    """Per-network serving state (internal)."""
+
+    spec: NetworkSpec
+    slots: int = 1
+    step_fn: Callable | None = None
+    autorun: bool = False                # MultiModelEngine mode: jobs free-run
+    params: dict | None = None
+    deployment: object = None            # compiler Deployment (executable nets)
+    runner: Callable | None = None       # batched runner at the slot count
+    engine: object = None                # BatchedInferenceEngine (attach mode)
+    queue: RequestQueue | None = None
+
+
+def _as_graph(net, name: str, *, batch: int, cache_len: int,
+              max_layers: int | None) -> Graph:
+    """Accept a Graph directly or lower a ModelConfig to one decode step
+    (truncated to max_layers for tractable schedule construction)."""
+    if isinstance(net, Graph):
+        return net
+    if isinstance(net, ModelConfig):
+        L = (min(net.num_layers, max_layers) if max_layers is not None
+             else net.num_layers)
+        return lm_decode_graph(net, batch, cache_len, layers=L)
+    raise TypeError(f"expected a Graph or ModelConfig for network "
+                    f"{name!r}, got {type(net).__name__}")
+
+
+class Server:
+    """Unified real-time serving runtime over compiled Deployments.
+
+    See the module docstring for the lifecycle. Constructor knobs:
+
+      backend        any registered backend name ("numpy", "jax", "pallas",
+                     third-party) — networks with a compiled lowering get a
+                     Deployment + batched runner on it;
+      queue_capacity / queue_policy
+                     bounded per-network request queues ("reject" |
+                     "drop-oldest");
+      speed_ratio    pin the host-vs-model speed ratio (None: calibrate on
+                     the first real execution);
+      slack_factor   wall-clock budget slack over the scaled bound.
+    """
+
+    def __init__(self, machine: HardwareModel, *, backend: str = "jax",
+                 num_cores: int | None = None, arbitration: str = "static",
+                 queue_capacity: int = 64, queue_policy: str = "reject",
+                 speed_ratio: float | None = None,
+                 slack_factor: float = 1.5):
+        from ..compiler import get_backend
+        get_backend(backend)                 # fail fast on unknown backend
+        self.machine = machine
+        self.backend = backend
+        self.num_cores = num_cores
+        self.arbitration = arbitration
+        self.queue_capacity = queue_capacity
+        self.queue_policy = queue_policy
+        self.monitor = DeadlineMonitor(speed_ratio=speed_ratio,
+                                       slack_factor=slack_factor)
+        self.metrics = {"jobs": 0, "idle_jobs": 0, "tickets": 0}
+        self._nets: dict[str, _Network] = {}
+        self.report: TasksetReport | None = None
+        self.compiled = None                 # CompiledTaskset after analyze()
+        self._cursor = 0                     # next job in the hyperperiod
+        self.hyperperiods_completed = 0
+        self._tids = itertools.count()
+
+    # -- registration --------------------------------------------------------
+    @property
+    def specs(self) -> list[NetworkSpec]:
+        return [st.spec for st in self._nets.values()]
+
+    @property
+    def networks(self) -> list[str]:
+        return list(self._nets)
+
+    @property
+    def executors(self) -> dict[str, object]:
+        """Per-network executors: the `BatchedInferenceEngine` where one
+        was attached (`attach_executors`), else the compiled Deployment."""
+        return {n: (st.engine or st.deployment)
+                for n, st in self._nets.items()
+                if st.engine is not None or st.deployment is not None}
+
+    def add(self, name: str, net, period_s: float,
+            deadline_s: float | None = None, *,
+            step_fn: Callable | None = None, slots: int = 1,
+            autorun: bool = False, params: dict | None = None,
+            batch: int = 1, cache_len: int = 256,
+            max_layers: int | None = 4) -> None:
+        """Register WITHOUT admission control or executor building — the
+        analysis is invalidated and re-run lazily. This is the unchecked
+        path `MultiModelEngine.add_graph/add_model` ride on; new code
+        should prefer `register`.
+
+        autorun=True marks a free-running network (MultiModelEngine mode):
+        its `step_fn` takes NO arguments and is invoked once per job;
+        autorun networks refuse `submit` (queued serving uses the one-arg
+        ``step_fn(payload)`` convention of `register`)."""
+        if name in self._nets:
+            raise ServeError(f"network {name!r} already registered")
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        graph = _as_graph(net, name, batch=batch, cache_len=cache_len,
+                          max_layers=max_layers)
+        self._nets[name] = _Network(
+            spec=NetworkSpec(name, graph, period_s, deadline_s),
+            slots=slots, step_fn=step_fn, autorun=autorun, params=params,
+            queue=RequestQueue(name, self.queue_capacity, self.queue_policy))
+        self._invalidate()
+
+    def _invalidate(self) -> None:
+        """Taskset changed: drop the analysis and restart the timeline."""
+        self.report = None
+        self.compiled = None
+        self._cursor = 0
+        self.hyperperiods_completed = 0
+
+    def analyze(self) -> TasksetReport:
+        """(Re)run the hyperperiod analysis over the registered taskset."""
+        if not self._nets:
+            raise AdmissionError("no networks registered")
+        self.report, self.compiled = analyze_taskset(
+            self.specs, self.machine, self.num_cores,
+            arbitration=self.arbitration)
+        self._cursor = 0
+        return self.report
+
+    def register(self, name: str, net, period_s: float,
+                 deadline_s: float | None = None, *,
+                 step_fn: Callable | None = None, slots: int = 1,
+                 params: dict | None = None, batch: int = 1,
+                 cache_len: int = 256,
+                 max_layers: int | None = 4) -> NetworkVerdict:
+        """Admission-controlled registration (the front door).
+
+        Extends the taskset with `net` (a Graph, or a ModelConfig lowered
+        to one decode step), re-runs the hyperperiod analysis, and — only
+        if the whole extended taskset stays schedulable — compiles the
+        network's executable Deployment on the server backend. On an
+        unschedulable verdict (`AdmissionError`, `.report` attached) or ANY
+        failure along the way, the server atomically rolls back to the
+        previously admitted set, which keeps serving untouched.
+
+        Networks whose op kinds have no compiled lowering (LM decode
+        graphs) are admitted for analysis and served through `step_fn`
+        (one request per job: ``step_fn(payload) -> output``).
+        """
+        snapshot = (dict(self._nets), self.report, self.compiled,
+                    self._cursor, self.hyperperiods_completed)
+        try:
+            self.add(name, net, period_s, deadline_s, step_fn=step_fn,
+                     slots=slots, params=params, batch=batch,
+                     cache_len=cache_len, max_layers=max_layers)
+            report = self.analyze()
+            if not report.schedulable:
+                raise AdmissionError(
+                    f"admitting {name!r} makes the taskset unschedulable:\n"
+                    f"{report.summary()}", report=report)
+            self._build_executor(name)
+        except Exception:
+            (self._nets, self.report, self.compiled,
+             self._cursor, self.hyperperiods_completed) = snapshot
+            raise
+        return report.verdict_of(name)
+
+    def _build_executor(self, name: str) -> None:
+        """Compile the network's Deployment + batched runner on the server
+        backend (skipped for step_fn-driven and analysis-only networks)."""
+        from ..compiler import compile as compile_deployment
+        from ..core.compiled import supports_graph
+        st = self._nets[name]
+        if st.step_fn is not None or not supports_graph(st.spec.graph):
+            return
+        st.deployment = compile_deployment(
+            st.spec.graph, self.machine, backend=self.backend,
+            params=st.params, num_cores=self.num_cores,
+            arbitration=self.arbitration)
+        st.runner = st.deployment.runner(batched=True, backend=self.backend)
+
+    def attach(self, name: str, step_fn: Callable) -> None:
+        """(Re)attach the execution callable of a step_fn-driven network —
+        e.g. after `Server.load`, where callables cannot be serialized."""
+        self._net(name).step_fn = step_fn
+
+    def _net(self, name: str) -> _Network:
+        try:
+            return self._nets[name]
+        except KeyError:
+            raise ServeError(f"unknown network {name!r} "
+                             f"(registered: {self.networks})") from None
+
+    # -- request intake ------------------------------------------------------
+    def submit(self, name: str, payload, deadline_s: float | None = None
+               ) -> Ticket:
+        """Enqueue one request for `name`; returns its `Ticket`.
+
+        `payload` is {input_name: array} (or a bare per-sample array for
+        single-input graphs) for compiled networks, or whatever the
+        network's `step_fn` accepts. `deadline_s` (model-time seconds)
+        overrides the network deadline for THIS request's verdict; the
+        schedule-level enforcement vs the WCET bound is unaffected.
+        Raises `BackpressureError` when the bounded queue is full under
+        the reject policy; under drop-oldest the stalest ticket is marked
+        "dropped" instead."""
+        st = self._net(name)
+        if st.autorun:
+            raise ServeError(
+                f"network {name!r} free-runs a no-arg step_fn every job "
+                f"(MultiModelEngine mode) and does not take submissions")
+        if st.runner is None and st.step_fn is None and \
+                st.deployment is None:
+            raise ServeError(
+                f"network {name!r} has no executor: it was added without "
+                f"admission (or is analysis-only) — register it through "
+                f"Server.register, pass step_fn=, or call attach()")
+        t = Ticket(tid=next(self._tids), network=name, payload=payload,
+                   deadline_s=deadline_s)
+        st.queue.push(t)
+        return t
+
+    def queue_depths(self) -> dict[str, int]:
+        return {n: len(st.queue) for n, st in self._nets.items()}
+
+    # -- release-order execution ---------------------------------------------
+    def step(self) -> Job:
+        """Execute the next job of the hyperperiod program (release order),
+        serving that network's queued tickets in its static batch slots.
+        Advances across hyperperiod boundaries; returns the executed Job."""
+        if self.report is None:
+            self.analyze()
+        jobs = self.compiled.jobs
+        job = jobs[self._cursor]
+        release_abs = (self.hyperperiods_completed
+                       * self.compiled.hyperperiod_s + job.release)
+        self._execute_job(job, release_abs)
+        self._cursor += 1
+        if self._cursor >= len(jobs):
+            self._cursor = 0
+            self.hyperperiods_completed += 1
+        return job
+
+    def _execute_job(self, job: Job, release_abs: float) -> None:
+        st = self._nets[job.network]
+        bound = self.report.bound(job.network)
+        self.metrics["jobs"] += 1
+        if st.autorun and st.step_fn is not None:
+            # MultiModelEngine mode: every job free-runs its no-arg fn
+            # (autorun networks never hold tickets — submit refuses them)
+            t0 = time.perf_counter()
+            st.step_fn()
+            dt = time.perf_counter() - t0
+            self.monitor.check(job.network, dt, bound)
+        elif st.runner is not None and len(st.queue) > 0:
+            tickets = st.queue.pop_upto(st.slots)
+            with self._failing(tickets):
+                batch = self._stack(st, [t.payload for t in tickets])
+                t0 = time.perf_counter()
+                out = st.runner(batch)
+                dt = time.perf_counter() - t0
+            self.monitor.check(job.network, dt, bound)
+            for i, t in enumerate(tickets):
+                self._finish(t, {k: v[i] for k, v in out.items()},
+                             dt, bound, release_abs)
+        elif st.step_fn is not None and len(st.queue) > 0:
+            tickets = st.queue.pop_upto(1)
+            (t,) = tickets
+            with self._failing(tickets):
+                t0 = time.perf_counter()
+                out = st.step_fn(t.payload)
+                dt = time.perf_counter() - t0
+            self.monitor.check(job.network, dt, bound)
+            self._finish(t, out, dt, bound, release_abs)
+        else:
+            self.metrics["idle_jobs"] += 1
+
+    @contextlib.contextmanager
+    def _failing(self, tickets: list[Ticket]):
+        """Popped tickets must never be silently lost: if serving them
+        raises, they are marked "failed" (with the error) before the
+        exception propagates to the `step()`/`run()` caller."""
+        try:
+            yield
+        except Exception as e:
+            for t in tickets:
+                t.status = "failed"
+                t.error = f"{type(e).__name__}: {e}"
+            raise
+
+    def _stack(self, st: _Network, payloads: list) -> dict:
+        """Short batches are padded to the static slot count (fixed shapes
+        for the compiled runner); padded rows are computed and discarded."""
+        graph = st.spec.graph
+        dicts = [(p if isinstance(p, dict) else {graph.inputs[0]: p})
+                 for p in payloads]
+        batch = {}
+        for name in graph.inputs:
+            try:
+                arrs = [np.asarray(d[name]) for d in dicts]
+            except KeyError:
+                raise ServeError(
+                    f"payload for {st.spec.name!r} is missing input "
+                    f"{name!r} (graph inputs: {list(graph.inputs)})"
+                ) from None
+            arrs += [np.zeros_like(arrs[0])] * (st.slots - len(arrs))
+            batch[name] = np.stack(arrs)
+        return batch
+
+    def _finish(self, t: Ticket, output, dt: float, bound: float,
+                release_abs: float) -> None:
+        deadline = (t.deadline_s if t.deadline_s is not None
+                    else self._nets[t.network].spec.deadline)
+        verdict = self.monitor.judge(t.network, dt, bound, deadline)
+        t._result = TicketResult(output=output, latency_s=dt,
+                                 response_bound_s=bound, verdict=verdict,
+                                 release_s=release_abs)
+        t.status = "done"
+        self.metrics["tickets"] += 1
+
+    def run(self, hyperperiods: int | None = None,
+            duration_s: float | None = None, *,
+            restart: bool = False) -> dict:
+        """Serve `hyperperiods` whole hyperperiods of jobs (or enough to
+        cover `duration_s` of modeled time; default 1), continuing from the
+        current job cursor — back-to-back calls give sustained operation.
+        Returns the telemetry snapshot (see `telemetry()`)."""
+        if self.report is None:
+            self.analyze()
+        if restart:
+            self._cursor = 0
+        if duration_s is not None:
+            if hyperperiods is not None:
+                raise ValueError("pass hyperperiods= or duration_s=, not both")
+            hyperperiods = max(1, math.ceil(
+                duration_s / self.compiled.hyperperiod_s))
+        for _ in range((hyperperiods or 1) * len(self.compiled.jobs)):
+            self.step()
+        return self.telemetry()
+
+    # -- telemetry -----------------------------------------------------------
+    def telemetry(self) -> dict:
+        """Deadline accounting + queue/serving counters, machine-readable."""
+        return {**self.monitor.snapshot(),
+                "metrics": dict(self.metrics),
+                "queue_depths": self.queue_depths(),
+                "dropped": {n: st.queue.dropped
+                            for n, st in self._nets.items()},
+                "hyperperiods_completed": self.hyperperiods_completed}
+
+    def summary(self) -> str:
+        lines = [f"Server[{len(self._nets)} nets @ {self.machine.name}, "
+                 f"backend={self.backend}, queue={self.queue_capacity} "
+                 f"({self.queue_policy})]"]
+        if self.report is not None:
+            lines.append(self.report.summary())
+        lines.append(self.monitor.summary())
+        lines.append(f"  jobs={self.metrics['jobs']} "
+                     f"(idle {self.metrics['idle_jobs']}), "
+                     f"tickets={self.metrics['tickets']}, "
+                     f"queued={self.queue_depths()}, "
+                     f"hyperperiods={self.hyperperiods_completed}")
+        return "\n".join(lines)
+
+    # -- MultiModelEngine-compat executor attachment -------------------------
+    def attach_executors(self, params_by_net: dict | None = None,
+                         inputs_by_net: dict | None = None,
+                         backend: str | None = None,
+                         seed: int = 0) -> dict[str, object]:
+        """Install compiled-deployment engines as free-running step_fns for
+        every executable network that has none (the
+        `MultiModelEngine.attach_compiled_executors` path): each job
+        instance replays the network's Deployment on a fixed input. Returns
+        the per-network `BatchedInferenceEngine`s."""
+        from ..compiler import compile as compile_deployment
+        from ..core.compiled import supports_graph
+        from ..core.executor import init_params
+        from .engine import BatchedInferenceEngine
+        backend = backend or self.backend
+        params_by_net = params_by_net or {}
+        inputs_by_net = inputs_by_net or {}
+        engines: dict[str, object] = {}
+        rng = np.random.default_rng(seed)
+        for name, st in self._nets.items():
+            if st.step_fn is not None or not supports_graph(st.spec.graph):
+                continue
+            graph = st.spec.graph
+            params = (params_by_net.get(name) or st.params
+                      or init_params(graph))
+            inp = inputs_by_net.get(name)
+            if inp is None:
+                inp = {t: rng.integers(
+                           -64, 64, size=(1,) + graph.tensors[t].shape
+                       ).astype(np.int8)
+                       for t in graph.inputs}
+            dep = compile_deployment(graph, self.machine, backend=backend,
+                                     params=params,
+                                     num_cores=self.num_cores,
+                                     arbitration=self.arbitration)
+            eng = BatchedInferenceEngine.from_deployment(dep)
+            st.step_fn = (lambda e=eng, x=inp: e.infer(x))
+            st.autorun = True
+            st.deployment = dep          # the artifact (bundles save this)
+            st.engine = eng
+            engines[name] = eng
+        return engines
+
+    # -- bundles -------------------------------------------------------------
+    def save(self, dirpath: str) -> str:
+        """Write the whole serving configuration as a multi-network bundle:
+        one PR-4 `Deployment` artifact per executable network plus the
+        taskset/queue metadata and (pickled) the machine and the graphs of
+        analysis-only networks. step_fn callables are NOT serialized —
+        reattach them after `load` (via its `step_fns=` or `attach`)."""
+        from ..compiler import save_bundle
+        if self.report is None:
+            self.analyze()
+        deployments = {n: st.deployment for n, st in self._nets.items()
+                       if st.deployment is not None}
+        extra = {
+            "server": {"backend": self.backend, "num_cores": self.num_cores,
+                       "arbitration": self.arbitration,
+                       "queue_capacity": self.queue_capacity,
+                       "queue_policy": self.queue_policy,
+                       "speed_ratio": (self.monitor.speed_ratio
+                                       if self.monitor.pinned else None),
+                       "slack_factor": self.monitor.slack_factor},
+            "networks": [{"name": n, "period_s": st.spec.period_s,
+                          "deadline_s": st.spec.deadline_s,
+                          "slots": st.slots,
+                          "executable": n in deployments,
+                          "step_fn": st.step_fn is not None}
+                         for n, st in self._nets.items()],
+            "machine_fingerprint": self.machine.fingerprint(),
+            "hyperperiod_s": self.compiled.hyperperiod_s,
+            "schedulable": self.report.schedulable,
+        }
+        objects = {"machine": self.machine,
+                   "graphs": {n: st.spec.graph
+                              for n, st in self._nets.items()
+                              if n not in deployments}}
+        return save_bundle(dirpath, deployments, extra=extra,
+                           objects=objects)
+
+    @classmethod
+    def load(cls, dirpath: str, *, machine: HardwareModel | None = None,
+             step_fns: dict[str, Callable] | None = None) -> "Server":
+        """Reload a saved serving configuration.
+
+        Every member artifact is validated on load (signatures,
+        fingerprints — optionally against `machine`); executable networks
+        serve their saved Deployments directly (bit-exact with the saved
+        server), analysis-only networks get their step_fns from
+        `step_fns=` (or later via `attach`). The hyperperiod analysis is
+        re-derived — deterministically, so the saved verdict is reproduced
+        on the saved machine."""
+        from ..compiler import ArtifactError, load_bundle
+        deployments, extra, objects = load_bundle(dirpath, machine=machine)
+        cfg = extra.get("server", {})
+        objects = objects or {}
+        hw = machine or objects.get("machine")
+        if hw is None:
+            raise ArtifactError(f"{dirpath}: bundle carries no machine; "
+                                f"pass machine= explicitly")
+        want_fp = extra.get("machine_fingerprint")
+        if want_fp and hw.fingerprint() != want_fp:
+            raise ArtifactError(
+                f"{dirpath}: serving bundle was saved for machine "
+                f"{want_fp}, refusing {hw.name} ({hw.fingerprint()})")
+        srv = cls(hw, backend=cfg.get("backend", "jax"),
+                  num_cores=cfg.get("num_cores"),
+                  arbitration=cfg.get("arbitration", "static"),
+                  queue_capacity=cfg.get("queue_capacity", 64),
+                  queue_policy=cfg.get("queue_policy", "reject"),
+                  speed_ratio=cfg.get("speed_ratio"),
+                  slack_factor=cfg.get("slack_factor", 1.5))
+        step_fns = step_fns or {}
+        for net in extra.get("networks", []):
+            name = net["name"]
+            if net.get("executable"):
+                dep = deployments[name]
+                srv.add(name, dep.graph, net["period_s"], net["deadline_s"],
+                        slots=net.get("slots", 1))
+                st = srv._nets[name]
+                st.deployment = dep
+                st.runner = dep.runner(batched=True, backend=srv.backend)
+            else:
+                graph = objects.get("graphs", {}).get(name)
+                if graph is None:
+                    raise ArtifactError(
+                        f"{dirpath}: bundle lists network {name!r} but "
+                        f"carries neither its artifact nor its graph")
+                srv.add(name, graph, net["period_s"], net["deadline_s"],
+                        slots=net.get("slots", 1),
+                        step_fn=step_fns.get(name))
+        srv.analyze()
+        return srv

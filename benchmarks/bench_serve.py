@@ -1,18 +1,26 @@
 """Sustained-serving benchmark: `repro.serve.Server` under mixed traffic.
 
-A mixed taskset — a CNN at 100 Hz (2 static batch slots) + an LM decode
-network at 50 Hz (step_fn-driven, analysis-only graph) — is registered
-through the admission-controlled front door and served for N hyperperiods
-of submitted requests on the numpy and jax backends. Reported per backend:
+Sections (all emit into ``BENCH_serve.json``):
 
-  * sustained throughput (served tickets / wall second),
-  * request latency p50 / p99 (host wall time of the serving job),
-  * deadline miss rate from the shared `DeadlineMonitor`.
+  * **server** — a mixed taskset (CNN at 100 Hz with 2 static batch slots
+    + an LM decode network at 50 Hz, step_fn-driven) registered through
+    the admission-controlled front door and served for N hyperperiods on
+    the numpy and jax backends: sustained throughput, p50/p99 request
+    latency, deadline miss rate. CNN ticket outputs must be bit-exact
+    across backends.
+  * **continuous** — continuous batching vs the static batch-to-completion
+    path on a mixed arrival trace (short and long generations
+    interleaved): sustained token throughput, per-request p99, deadline
+    miss rate, and the ``continuous_speedup`` ratio the CI perf gate
+    holds against ``benchmarks/baseline_serve.json``. The two paths MUST
+    be token-for-token identical (`BackendMismatch` otherwise).
+  * full mode only: the per-token decode WCET table for the assigned LM
+    archs + raw `ServeEngine` throughput (absorbed from the retired
+    ``bench_serving`` section).
 
-CNN ticket outputs must be bit-exact across backends (`BackendMismatch`
-aborts the whole harness run, same policy as the executor benchmark), and
-an unschedulable smoke taskset is a hard failure — both are exactly what
-the CI serve-smoke step gates on. Emits ``BENCH_serve.json``.
+A `BackendMismatch` anywhere aborts the whole harness run, and an
+unschedulable smoke taskset is a hard failure — exactly what the CI
+serve-smoke step gates on.
 """
 
 from __future__ import annotations
@@ -25,9 +33,9 @@ import numpy as np
 from repro.core import cnn
 from repro.core.lmgraph import lm_decode_graph
 from repro.core.taskset import hyperperiod
-from repro.hw import scaled_paper_machine
+from repro.hw import TPU_V5E, scaled_paper_machine
 from repro.models.config import ModelConfig
-from repro.serve import Server
+from repro.serve import DeadlineMonitor, Server
 
 from .bench_executor import BackendMismatch
 
@@ -108,6 +116,160 @@ def _serve_one_backend(backend: str, hyperperiods: int,
     return stats, outputs
 
 
+def _mixed_trace(n: int, prompt_len: int, rng) -> tuple[list, list]:
+    """Mixed arrival trace: interleaved short and long generations — the
+    workload where batch-to-completion pays head-of-line blocking (every
+    short request in a group waits out the group's longest) and
+    continuous batching refills freed slots immediately."""
+    prompts = [list(rng.integers(1, 400, rng.integers(1, prompt_len + 1)))
+               for _ in range(n)]
+    max_new = [4 if i % 2 == 0 else 24 for i in range(n)]
+    return prompts, max_new
+
+
+def _run_continuous(csv_rows: list, smoke: bool) -> dict:
+    """Continuous batching vs static batch-to-completion on one mixed
+    trace; returns the stats dict for BENCH_serve.json["continuous"]."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serve import ContinuousEngine, LMBackend, ServeEngine
+    from repro.serve.engine import Request
+
+    slots, prompt_len, max_len = 4, 6, 64
+    n = 16 if smoke else 48
+    cfg = get_config("smollm-135m", reduced=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts, max_new = _mixed_trace(n, prompt_len, rng)
+    total_tokens = sum(max_new)
+
+    print(f"\n== Continuous batching vs static batch-to-completion "
+          f"(reduced smollm, {slots} slots, {n} reqs, "
+          f"{total_tokens} tokens, CPU) ==")
+
+    # -- static path: FIFO groups of `slots`, each run to completion ----------
+    static = ServeEngine(cfg, params, batch_size=slots, max_len=max_len)
+    make = lambda: [Request(rid=i, prompt=list(p), max_new_tokens=m)
+                    for i, (p, m) in enumerate(zip(prompts, max_new))]
+    static.serve(make()[:slots], prompt_len=prompt_len)      # jit warmup
+    reqs = make()
+    static_lat: list[float] = []
+    wall0 = time.perf_counter()
+    for i in range(0, n, slots):
+        g0 = time.perf_counter()
+        static.serve(reqs[i:i + slots], prompt_len=prompt_len)
+        # batch-to-completion: every request in the group waits the group
+        static_lat += [time.perf_counter() - g0] * len(reqs[i:i + slots])
+    static_wall = time.perf_counter() - wall0
+    expect = {r.rid: r.out for r in reqs}
+
+    # -- continuous path: same trace through the slot-indexed loop ------------
+    backend = LMBackend(cfg, params, slots=slots, prompt_len=prompt_len,
+                        max_len=max_len)
+    monitor = DeadlineMonitor()
+    eng = ContinuousEngine(backend, max_tokens=max(max_new),
+                           prefill_per_step=2, monitor=monitor,
+                           step_bound_s=1.0, default_deadline_s=1.0)
+    eng.enqueue(prompts[0], max_new[0])                      # jit warmup
+    warm_dts = [eng.step().decode_dt_s for _ in range(6)]
+    eng.drain()
+    # pin the speed ratio off the warmed-up step time (x3 jitter margin)
+    # so the per-step deadline checks are meaningful on any host
+    monitor.reset()
+    monitor.pin(3.0 * max(warm_dts))
+    creqs = []
+    wall0 = time.perf_counter()
+    for i, (p, m) in enumerate(zip(prompts, max_new)):
+        creqs.append(eng.enqueue(p, m, rid=i))
+        eng.step()                       # arrivals interleave with decode
+    eng.drain()
+    cont_wall = time.perf_counter() - wall0
+
+    for r in creqs:                      # both paths MUST agree per token
+        if r.out != expect[r.rid]:
+            raise BackendMismatch(
+                f"continuous vs static: request {r.rid} diverged "
+                f"({r.out} vs {expect[r.rid]})")
+    print(f"continuous bit-exact vs static across {n} requests")
+
+    cont_lat = sorted(r.latency_s for r in creqs)
+    static_lat.sort()
+    misses = monitor.misses.get("decode", 0)
+    checks = monitor.checks.get("decode", 0)
+    stats = {
+        "requests": n,
+        "tokens": total_tokens,
+        "slots": slots,
+        "static_tps": total_tokens / static_wall,
+        "continuous_tps": total_tokens / cont_wall,
+        "continuous_speedup": static_wall / cont_wall,
+        "static_p99_us": static_lat[int(len(static_lat) * 0.99)
+                                    if len(static_lat) > 1 else 0] * 1e6,
+        "continuous_p99_us": cont_lat[int(len(cont_lat) * 0.99)
+                                      if len(cont_lat) > 1 else 0] * 1e6,
+        "miss_rate": misses / checks if checks else 0.0,
+        "mean_occupancy": monitor.mean_occupancy("decode"),
+    }
+    print(f"{'path':<12}{'tok/s':>10}{'p99 ms':>10}{'miss rate':>11}")
+    print(f"{'static':<12}{stats['static_tps']:>10.1f}"
+          f"{stats['static_p99_us'] / 1e3:>10.1f}{0.0:>11.2%}")
+    print(f"{'continuous':<12}{stats['continuous_tps']:>10.1f}"
+          f"{stats['continuous_p99_us'] / 1e3:>10.1f}"
+          f"{stats['miss_rate']:>11.2%}")
+    print(f"continuous speedup: {stats['continuous_speedup']:.2f}x "
+          f"(mean occupancy {stats['mean_occupancy']:.1%})")
+    csv_rows.append(("serve_continuous/speedup",
+                     stats['continuous_p99_us'],
+                     f"speedup={stats['continuous_speedup']:.2f};"
+                     f"miss={stats['miss_rate']:.4f}"))
+    return stats
+
+
+def _run_wcet_table(csv_rows: list) -> None:
+    """Per-token decode WCET bounds for the assigned LM archs + raw engine
+    throughput (the retired bench_serving section, full mode only)."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serve.engine import Request, ServeEngine
+    from repro.serve.predictable import analyze_decode
+
+    print("\n== Per-token decode WCET bounds (paper pipeline -> LM archs, "
+          "TPU-v5e model, 16 workers) ==")
+    print(f"{'arch':<22}{'batch':>6}{'cache':>7}{'wcet_ms/token':>14}"
+          f"{'dominant':>26}")
+    for arch, batch, cache in (("smollm-135m", 16, 2048),
+                               ("rwkv6-1.6b", 16, 2048),
+                               ("zamba2-1.2b", 16, 2048),
+                               ("mixtral-8x22b", 8, 2048),
+                               ("qwen1.5-110b", 8, 2048)):
+        cfg = get_config(arch)
+        rep = analyze_decode(cfg, batch, cache, TPU_V5E, num_cores=16,
+                             max_layers=2)
+        print(f"{arch:<22}{batch:>6}{cache:>7}"
+              f"{rep.per_token_wcet_s * 1e3:>14.3f}"
+              f"{rep.wcet.dominant_term():>26}")
+        csv_rows.append((f"serve_wcet/{arch}", rep.per_token_wcet_s * 1e6,
+                         f"dominant={rep.wcet.dominant_term().split()[0]}"))
+
+    print("\n== Engine throughput (reduced smollm, CPU) ==")
+    cfg = get_config("smollm-135m", reduced=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, batch_size=4, max_len=96)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=list(rng.integers(1, 400, 8)),
+                    max_new_tokens=16) for i in range(4)]
+    t0 = time.perf_counter()
+    eng.generate(reqs)
+    dt = time.perf_counter() - t0
+    tps = eng.metrics["tokens"] / dt
+    print(f"  {eng.metrics['tokens']} tokens in {dt:.2f}s = "
+          f"{tps:.1f} tok/s (batch 4, CPU reduced config)")
+    csv_rows.append(("serve_engine/reduced_cpu", dt * 1e6,
+                     f"tok_per_s={tps:.1f}"))
+
+
 def run(csv_rows: list, smoke: bool = False) -> None:
     hyperperiods = 3 if smoke else 12
     rng = np.random.default_rng(0)
@@ -151,6 +313,11 @@ def run(csv_rows: list, smoke: bool = False) -> None:
     print(f"backends bit-exact across {len(ref)} served tickets: "
           + ", ".join(BACKENDS))
 
+    continuous = _run_continuous(csv_rows, smoke)
+    if not smoke:
+        _run_wcet_table(csv_rows)
+
     with open("BENCH_serve.json", "w") as f:
-        json.dump({"machine": HW.name, "results": results}, f, indent=2)
+        json.dump({"machine": HW.name, "results": results,
+                   "continuous": continuous}, f, indent=2)
     print("wrote BENCH_serve.json")

@@ -1,30 +1,42 @@
-"""CI perf-regression gate for the compiled schedule executor.
+"""CI perf-regression gate for the compiled executor and the serve loop.
 
 Compares a fresh ``BENCH_executor.json`` (written by
 ``benchmarks.bench_executor``) against the committed baseline
 ``benchmarks/baseline_executor.json`` and fails (exit 1) if any gated
 compiled-backend speedup drops below ``threshold`` x its baseline value.
+When ``benchmarks/baseline_serve.json`` exists, the serve gate also runs:
+the continuous-batching speedup in ``BENCH_serve.json`` (written by
+``benchmarks.bench_serve``) is held to the same relative floor.
 
-The gated metrics are *speedups over the seed interpreter measured in the
-same process* — a ratio of two timings on the same machine — so they are
-robust to CI runner speed differences; only a real relative regression of
-the compiled paths trips the gate. To accept an intentional change, rerun
-the smoke benchmark and commit the new baseline:
+The gated metrics are *speedups measured in the same process* — a ratio
+of two timings on the same machine (compiled backend vs seed interpreter;
+continuous batching vs static batch-to-completion) — so they are robust
+to CI runner speed differences; only a real relative regression trips the
+gate. To accept an intentional change, rerun the smoke benchmark and
+commit the new baseline:
 
     PYTHONPATH=src python -m benchmarks.bench_executor --smoke \
         --json benchmarks/baseline_executor.json
+    PYTHONPATH=src python -m benchmarks.run --smoke --only serve \
+        && cp BENCH_serve.json benchmarks/baseline_serve.json
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 # speedup keys gated per preset. compiled_pallas is reported in the JSON
 # but NOT gated: on CPU CI it runs in Pallas interpret mode, whose timing
 # characterizes the XLA fallback lowering rather than the kernels.
 GATED_KEYS = ("speedup_np_vs_seed", "speedup_jax_b8_vs_seed")
+
+# serve keys gated from BENCH_serve.json["continuous"]: the wall-clock
+# ratio of the static batch-to-completion path over the continuous loop
+# on the same mixed trace in the same process.
+SERVE_GATED_KEYS = ("continuous_speedup",)
 
 
 def check(current: dict, baseline: dict, threshold: float = 0.7):
@@ -49,10 +61,49 @@ def check(current: dict, baseline: dict, threshold: float = 0.7):
     return ok, rows
 
 
+def check_serve(current: dict, baseline: dict, threshold: float = 0.7):
+    """Serve-loop gate over the "continuous" stats dict; same row shape as
+    `check` with preset "continuous"."""
+    base_stats = baseline.get("continuous", {})
+    cur_stats = current.get("continuous", {})
+    rows = []
+    ok = True
+    for key in SERVE_GATED_KEYS:
+        if key not in base_stats:
+            continue
+        base = float(base_stats[key])
+        floor = threshold * base
+        if key not in cur_stats:
+            rows.append(("continuous", key, base, None, floor, False))
+            ok = False
+            continue
+        cur = float(cur_stats[key])
+        row_ok = cur >= floor
+        rows.append(("continuous", key, base, cur, floor, row_ok))
+        ok = ok and row_ok
+    return ok, rows
+
+
+def _print_rows(rows) -> None:
+    for preset, key, base, cur, floor, row_ok in rows:
+        cur_s = "MISSING" if cur is None else f"{cur:8.1f}x"
+        print(
+            f"{preset:<20}{key:<26}{base:8.1f}x{floor:7.1f}x{cur_s:>9}  "
+            f"{'ok' if row_ok else 'REGRESSION'}"
+        )
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--current", default="BENCH_executor.json")
     ap.add_argument("--baseline", default="benchmarks/baseline_executor.json")
+    ap.add_argument("--serve-current", default="BENCH_serve.json")
+    ap.add_argument(
+        "--serve-baseline",
+        default="benchmarks/baseline_serve.json",
+        help="serve-loop baseline; the serve gate is skipped (with a "
+        "notice) when this file does not exist",
+    )
     ap.add_argument(
         "--threshold",
         type=float,
@@ -65,19 +116,28 @@ def main(argv=None) -> int:
     with open(args.baseline) as f:
         baseline = json.load(f)
     ok, rows = check(current, baseline, args.threshold)
-    print(f"{'preset':<20}{'metric':<26}{'baseline':>9}{'floor':>8}"
-          f"{'current':>9}  verdict")
-    for preset, key, base, cur, floor, row_ok in rows:
-        cur_s = "MISSING" if cur is None else f"{cur:8.1f}x"
-        print(
-            f"{preset:<20}{key:<26}{base:8.1f}x{floor:7.1f}x{cur_s:>9}  "
-            f"{'ok' if row_ok else 'REGRESSION'}"
+    if os.path.exists(args.serve_baseline):
+        with open(args.serve_current) as f:
+            serve_current = json.load(f)
+        with open(args.serve_baseline) as f:
+            serve_baseline = json.load(f)
+        serve_ok, serve_rows = check_serve(
+            serve_current, serve_baseline, args.threshold
         )
+        ok = ok and serve_ok
+        rows = rows + serve_rows
+    else:
+        print(f"note: {args.serve_baseline} not found; serve gate skipped")
+    print(
+        f"{'preset':<20}{'metric':<26}{'baseline':>9}{'floor':>8}"
+        f"{'current':>9}  verdict"
+    )
+    _print_rows(rows)
     if not ok:
         print(
-            "perf gate FAILED: compiled-executor speedup regressed below "
+            "perf gate FAILED: a gated speedup regressed below "
             f"{args.threshold}x baseline (see rows above); if intentional, "
-            "update benchmarks/baseline_executor.json",
+            "update the committed baseline under benchmarks/",
             file=sys.stderr,
         )
         return 1

@@ -8,9 +8,10 @@
   bench_executor  interpreter vs compiled schedule executor (numpy, jitted
                   batched JAX, Pallas kernels); emits BENCH_executor.json
   bench_kernels   worker-core kernels (int8 GEMM / conv-im2col; §IV.A)
-  bench_serving   per-token WCET for the assigned LM archs + engine
   bench_serve     sustained Server throughput/latency/miss-rate for a mixed
-                  CNN+LM taskset on numpy+jax; emits BENCH_serve.json
+                  CNN+LM taskset on numpy+jax, continuous-vs-static batching
+                  comparison, and (full mode) the per-token LM WCET table;
+                  emits BENCH_serve.json
   roofline        §Roofline table from the multi-pod dry-run artifacts
 
 ``--smoke`` runs a fast subset (taskset sweep + executor backends + serve
@@ -60,8 +61,7 @@ def main(argv: list[str] | None = None) -> None:
             ("serve", lambda: bench_serve.run(csv_rows, smoke=True)),
         ]
     else:
-        from . import bench_wcet, bench_schedule, bench_kernels, \
-            bench_serving, roofline
+        from . import bench_wcet, bench_schedule, bench_kernels, roofline
         sections = [
             ("wcet", lambda: (bench_wcet.run(csv_rows),
                               bench_wcet.run_mapping_ablation(csv_rows))),
@@ -69,7 +69,6 @@ def main(argv: list[str] | None = None) -> None:
             ("taskset", lambda: bench_taskset.run(csv_rows)),
             ("executor", lambda: bench_executor.run(csv_rows)),
             ("kernels", lambda: bench_kernels.run(csv_rows)),
-            ("serving", lambda: bench_serving.run(csv_rows)),
             ("serve", lambda: bench_serve.run(csv_rows)),
             ("roofline", lambda: roofline.run(csv_rows)),
         ]

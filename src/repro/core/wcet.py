@@ -262,3 +262,84 @@ def analyze_taskset(specs: list[NetworkSpec], hw: HardwareModel,
         total_subtasks=len(compiled.subtasks),
         total_jobs=len(compiled.jobs))
     return report, compiled
+
+
+@dataclasses.dataclass(frozen=True)
+class SustainedServeVerdict:
+    """Admission verdict for a *continuous-batching* decode network.
+
+    Release-batched networks are admitted per hyperperiod job; a continuous
+    decode loop instead holds `slots` batch slots and runs one slot-batched
+    decode step per period, so the right admission question is *sustained
+    slot occupancy*: can the slot pool absorb the offered token load with
+    the per-step WCET bound still inside the period?
+
+      token capacity  = slots / period_s            [tokens/s]
+      offered load    = arrival_rps * tokens_per_request
+      occupancy       = offered / capacity          (must be <= 1)
+      step_fits       = step_bound_s <= period_s
+
+    Occupancy above 1 means requests pile up in the queue without bound;
+    a step bound above the period means even an empty queue falls behind.
+    Both must hold for `schedulable`.
+    """
+
+    network: str
+    slots: int
+    period_s: float                      # one decode step per period
+    step_bound_s: float                  # WCET bound of the slot-batched step
+    arrival_rps: float                   # offered request arrival rate
+    tokens_per_request: float            # mean decode tokens per request
+
+    @property
+    def token_capacity_tps(self) -> float:
+        return self.slots / self.period_s
+
+    @property
+    def offered_load_tps(self) -> float:
+        return self.arrival_rps * self.tokens_per_request
+
+    @property
+    def occupancy(self) -> float:
+        """Long-run fraction of the slot pool the offered load keeps busy."""
+        return self.offered_load_tps / self.token_capacity_tps
+
+    @property
+    def step_fits(self) -> bool:
+        return self.step_bound_s <= self.period_s * (1 + 1e-9)
+
+    @property
+    def schedulable(self) -> bool:
+        return self.step_fits and self.occupancy <= 1.0 + 1e-9
+
+    def summary(self) -> str:
+        return (
+            f"Sustained[{self.network}: {self.slots} slots @ "
+            f"{1.0 / self.period_s:.1f} steps/s] "
+            f"capacity={self.token_capacity_tps:.1f} tok/s  "
+            f"offered={self.offered_load_tps:.1f} tok/s  "
+            f"occupancy={self.occupancy:.1%}  "
+            f"step R={self.step_bound_s * 1e3:.2f} ms "
+            f"{'fits' if self.step_fits else 'OVERRUNS'} "
+            f"P={self.period_s * 1e3:.2f} ms  "
+            f"{'SUSTAINABLE' if self.schedulable else 'NOT SUSTAINABLE'}")
+
+
+def sustained_occupancy(network: str, *, slots: int, period_s: float,
+                        step_bound_s: float, arrival_rps: float,
+                        tokens_per_request: float) -> SustainedServeVerdict:
+    """Sustained-occupancy admission check for a continuous decode loop
+    (see `SustainedServeVerdict`). Raises on non-positive inputs."""
+    if slots < 1:
+        raise ValueError(f"slots must be >= 1, got {slots}")
+    for name, val in (("period_s", period_s),
+                      ("step_bound_s", step_bound_s),
+                      ("tokens_per_request", tokens_per_request)):
+        if val <= 0:
+            raise ValueError(f"{name} must be > 0, got {val}")
+    if arrival_rps < 0:
+        raise ValueError(f"arrival_rps must be >= 0, got {arrival_rps}")
+    return SustainedServeVerdict(
+        network=network, slots=slots, period_s=period_s,
+        step_bound_s=step_bound_s, arrival_rps=arrival_rps,
+        tokens_per_request=tokens_per_request)

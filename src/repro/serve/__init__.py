@@ -10,9 +10,15 @@
 `MultiModelEngine` remain as thin wrappers (batched CNN inference, LM
 prefill/decode, per-step WCET enforcement, the historical taskset
 adapter) — all deadline accounting lives in `DeadlineMonitor`, all
-multi-network execution in `Server`. See docs/serving.md.
+multi-network execution in `Server`. LM decode traffic is served
+*continuously* (`repro.serve.continuous`): `Server.register_decode`
+installs a slot-indexed `ContinuousEngine` where requests enter and
+leave the batch mid-stream. See docs/serving.md.
 """
 
+from .continuous import (ContinuousEngine, ContinuousRequest, DecodeState,
+                         LMBackend, ResultTokens, SlotError, StepInfo,
+                         ToyBackend)
 from .engine import BatchedInferenceEngine, Request, ServeEngine
 from .monitor import DeadlineMonitor, DeadlineVerdict
 from .predictable import (AdmissionError, MultiModelEngine,
@@ -26,4 +32,7 @@ __all__ = ["Server", "Ticket", "TicketResult", "RequestQueue",
            "DeadlineMonitor", "DeadlineVerdict",
            "BatchedInferenceEngine", "Request", "ServeEngine",
            "PredictableEngine", "PredictableServeReport", "analyze_decode",
-           "MultiModelEngine"]
+           "MultiModelEngine",
+           "ContinuousEngine", "ContinuousRequest", "DecodeState",
+           "LMBackend", "ResultTokens", "SlotError", "StepInfo",
+           "ToyBackend"]

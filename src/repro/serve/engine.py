@@ -150,3 +150,32 @@ class ServeEngine:
         """Per-decode-step timing hook (each step individually, measured at
         its sync point). `PredictableEngine` overrides this to feed the
         `DeadlineMonitor`; the base engine keeps no deadline state."""
+
+    def serve(self, requests: list[Request],
+              prompt_len: int | None = None) -> list[Request]:
+        """Batch-to-completion oracle: FIFO groups of <= `batch_size`, each
+        run to completion with `generate`.
+
+        Every prompt is left-padded to ONE fixed `prompt_len` (default: the
+        longest prompt in the set), so each request's context — and hence
+        its greedy token stream — is independent of how requests are
+        grouped into batches. That makes this the arrival-order-independent
+        ground truth the continuous-batching loop
+        (`repro.serve.continuous`) is differentially tested against.
+        """
+        P = prompt_len or max((len(r.prompt) for r in requests), default=1)
+        for r in requests:
+            if len(r.prompt) > P:
+                raise ValueError(f"request {r.rid}: prompt length "
+                                 f"{len(r.prompt)} exceeds prompt_len {P}")
+        done: list[Request] = []
+        for i in range(0, len(requests), self.B):
+            group = requests[i:i + self.B]
+            padded = [dataclasses.replace(
+                r, prompt=[0] * (P - len(r.prompt)) + r.prompt, out=[])
+                for r in group]
+            for orig, p in zip(group, self.generate(padded)):
+                orig.out = p.out
+                orig.done = True
+                done.append(orig)
+        return done

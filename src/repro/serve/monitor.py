@@ -70,6 +70,9 @@ class DeadlineMonitor:
         self.misses: dict[str, int] = {}
         self._lat: dict[str, deque] = {}
         self._hist: dict[str, dict[int, int]] = {}
+        # per-network sustained-occupancy accounting (continuous batching):
+        # (sum of occupied slots, observations, slot capacity)
+        self._occ: dict[str, list] = {}
 
     # -- calibration ---------------------------------------------------------
     @property
@@ -95,6 +98,7 @@ class DeadlineMonitor:
         self.misses.clear()
         self._lat.clear()
         self._hist.clear()
+        self._occ.clear()
         if recalibrate and not self.pinned:
             self._ratio = None
 
@@ -134,6 +138,27 @@ class DeadlineMonitor:
         hist[bucket] = hist.get(bucket, 0) + 1
         return v
 
+    # -- occupancy (continuous batching) -------------------------------------
+    def record_occupancy(self, network: str, occupied: int,
+                         capacity: int) -> None:
+        """Record one decode step's slot occupancy for `network`. The mean
+        over a window is the *sustained* occupancy the admission story in
+        `core.wcet.sustained_occupancy` reasons about — occupancy near 1.0
+        with a rising queue means the slot pool is saturated."""
+        if not 0 <= occupied <= capacity:
+            raise ValueError(f"occupied={occupied} not in [0, {capacity}]")
+        acc = self._occ.setdefault(network, [0, 0, capacity])
+        acc[0] += occupied
+        acc[1] += 1
+        acc[2] = capacity
+
+    def mean_occupancy(self, network: str) -> float:
+        """Mean occupied-slot fraction over all recorded decode steps."""
+        acc = self._occ.get(network)
+        if not acc or not acc[1] or not acc[2]:
+            return 0.0
+        return acc[0] / (acc[1] * acc[2])
+
     # -- telemetry -----------------------------------------------------------
     @staticmethod
     def _bucket(latency_s: float) -> int:
@@ -161,7 +186,7 @@ class DeadlineMonitor:
     def snapshot(self) -> dict:
         """Machine-readable telemetry: calibration + per-network stats."""
         networks = {}
-        for name in self.checks:
+        for name in self.checks.keys() | self._occ.keys():
             vals = sorted(self._lat.get(name, ()))
             networks[name] = {
                 "checks": self.checks.get(name, 0),
@@ -174,6 +199,9 @@ class DeadlineMonitor:
                 "histogram": {self.bucket_label(b): c for b, c in
                               sorted(self._hist.get(name, {}).items())},
             }
+            if name in self._occ:
+                networks[name]["mean_occupancy"] = self.mean_occupancy(name)
+                networks[name]["slot_capacity"] = self._occ[name][2]
         return {"speed_ratio": self._ratio,
                 "slack_factor": self.slack_factor,
                 "networks": networks}
@@ -185,12 +213,15 @@ class DeadlineMonitor:
                  f"{'uncalibrated' if ratio is None else f'{ratio:.3g}'}, "
                  f"slack x{self.slack_factor:g}]"]
         for name, s in sorted(snap["networks"].items()):
+            occ = (f"  occ={s['mean_occupancy']:.1%}"
+                   f"/{s['slot_capacity']} slots"
+                   if "mean_occupancy" in s else "")
             lines.append(
                 f"  {name:<14} checks={s['checks']:<6} "
                 f"misses={s['misses']:<5} ({s['miss_rate']:.1%})  "
                 f"p50={s['p50_s'] * 1e3:.3f} ms  "
                 f"p99={s['p99_s'] * 1e3:.3f} ms  "
-                f"max={s['max_s'] * 1e3:.3f} ms")
+                f"max={s['max_s'] * 1e3:.3f} ms{occ}")
         if len(lines) == 1:
             lines.append("  (no checks recorded)")
         return "\n".join(lines)

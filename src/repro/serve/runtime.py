@@ -192,6 +192,9 @@ class _Network:
     runner: Callable | None = None       # batched runner at the slot count
     engine: object = None                # BatchedInferenceEngine (attach mode)
     queue: RequestQueue | None = None
+    cengine: object = None               # ContinuousEngine (decode networks)
+    sustained: object = None             # SustainedServeVerdict (if declared)
+    inflight: dict = dataclasses.field(default_factory=dict)  # rid -> Ticket
 
 
 def _as_graph(net, name: str, *, batch: int, cache_len: int,
@@ -346,6 +349,76 @@ class Server:
             raise
         return report.verdict_of(name)
 
+    def register_decode(self, name: str, cfg: ModelConfig, period_s: float,
+                        deadline_s: float | None = None, *, params,
+                        slots: int = 4, prompt_len: int = 16,
+                        max_new_tokens: int = 32, max_len: int = 256,
+                        arrival_rps: float | None = None,
+                        tokens_per_request: float | None = None,
+                        prefill_per_step: int = 1,
+                        max_layers: int | None = 4) -> NetworkVerdict:
+        """Admission-controlled registration of a *continuous-batching* LM
+        decode network (`repro.serve.continuous`).
+
+        The network is analyzed as one slot-batched decode step per period
+        (the fixed-shape graph the WCET bound holds for), then served by a
+        `ContinuousEngine` over an `LMBackend`: every `step()` job admits
+        up to `prefill_per_step` queued tickets into free slots and runs
+        ONE decode step for all occupied slots — requests enter and leave
+        mid-stream, and each gets a `DeadlineVerdict` against its own
+        deadline. Prompts are left-padded to `prompt_len` (`submit` rejects
+        longer ones), so outputs are bit-exact vs the batch-to-completion
+        oracle `ServeEngine.serve` regardless of arrival order.
+
+        Admission adds a *sustained-occupancy* check when the expected
+        traffic is declared (`arrival_rps`, and `tokens_per_request` which
+        defaults to `max_new_tokens`): offered token load must not exceed
+        the slot pool's token capacity (`core.wcet.sustained_occupancy`),
+        else `AdmissionError` — a loop that admits such traffic never
+        drains its queue. Rollback semantics match `register`.
+
+        Decode networks are analysis-only in bundles: `save` keeps the
+        graph + taskset row, `load` restores them without the engine —
+        re-register with `register_decode` to resume serving.
+        """
+        from .continuous import ContinuousEngine, LMBackend
+        from ..core.wcet import sustained_occupancy
+        snapshot = (dict(self._nets), self.report, self.compiled,
+                    self._cursor, self.hyperperiods_completed)
+        try:
+            self.add(name, cfg, period_s, deadline_s, slots=slots,
+                     params=params, batch=slots, cache_len=max_len,
+                     max_layers=max_layers)
+            report = self.analyze()
+            if not report.schedulable:
+                raise AdmissionError(
+                    f"admitting {name!r} makes the taskset unschedulable:\n"
+                    f"{report.summary()}", report=report)
+            st = self._nets[name]
+            bound = report.bound(name)
+            if arrival_rps is not None:
+                st.sustained = sustained_occupancy(
+                    name, slots=slots, period_s=period_s,
+                    step_bound_s=bound, arrival_rps=arrival_rps,
+                    tokens_per_request=(tokens_per_request
+                                        or float(max_new_tokens)))
+                if not st.sustained.schedulable:
+                    raise AdmissionError(
+                        f"admitting {name!r} oversubscribes the slot pool:\n"
+                        f"{st.sustained.summary()}")
+            backend = LMBackend(cfg, params, slots=slots,
+                                prompt_len=prompt_len, max_len=max_len)
+            st.cengine = ContinuousEngine(
+                backend, max_tokens=max_new_tokens,
+                prefill_per_step=prefill_per_step, monitor=self.monitor,
+                step_bound_s=bound, default_deadline_s=st.spec.deadline,
+                network=name)
+        except Exception:
+            (self._nets, self.report, self.compiled,
+             self._cursor, self.hyperperiods_completed) = snapshot
+            raise
+        return report.verdict_of(name)
+
     def _build_executor(self, name: str) -> None:
         """Compile the network's Deployment + batched runner on the server
         backend (skipped for step_fn-driven and analysis-only networks)."""
@@ -391,7 +464,7 @@ class Server:
                 f"network {name!r} free-runs a no-arg step_fn every job "
                 f"(MultiModelEngine mode) and does not take submissions")
         if st.runner is None and st.step_fn is None and \
-                st.deployment is None:
+                st.deployment is None and st.cengine is None:
             raise ServeError(
                 f"network {name!r} has no executor: it was added without "
                 f"admission (or is analysis-only) — register it through "
@@ -444,6 +517,8 @@ class Server:
             for i, t in enumerate(tickets):
                 self._finish(t, {k: v[i] for k, v in out.items()},
                              dt, bound, release_abs)
+        elif st.cengine is not None:
+            self._step_continuous(st, job, release_abs, bound)
         elif st.step_fn is not None and len(st.queue) > 0:
             tickets = st.queue.pop_upto(1)
             (t,) = tickets
@@ -455,6 +530,38 @@ class Server:
             self._finish(t, out, dt, bound, release_abs)
         else:
             self.metrics["idle_jobs"] += 1
+
+    def _step_continuous(self, st: _Network, job: Job, release_abs: float,
+                         bound: float) -> None:
+        """One hyperperiod job of a continuous decode network: admit up to
+        the engine's per-step prefill budget from the ticket queue, run one
+        slot-batched decode step (the engine checks it against the WCET
+        bound and records occupancy), finish tickets whose streams
+        completed. A ticket's payload is the prompt (list of token ids) or
+        ``{"prompt": [...], "max_new_tokens": n}``."""
+        ce = st.cengine
+        for t in st.queue.pop_upto(ce.admittable()):
+            with self._failing([t]):
+                if isinstance(t.payload, dict):
+                    prompt = t.payload["prompt"]
+                    max_new = t.payload.get("max_new_tokens")
+                else:
+                    prompt, max_new = t.payload, None
+                ce.enqueue(prompt, max_new, rid=t.tid,
+                           deadline_s=t.deadline_s)
+            st.inflight[t.tid] = t
+        if not ce.has_work:
+            self.metrics["idle_jobs"] += 1
+            return
+        info = ce.step()
+        for req in info.finished:
+            t = st.inflight.pop(req.rid)
+            t._result = TicketResult(
+                output=list(req.out), latency_s=req.latency_s,
+                response_bound_s=bound * req.steps_held,
+                verdict=req.verdict, release_s=release_abs)
+            t.status = "done"
+            self.metrics["tickets"] += 1
 
     @contextlib.contextmanager
     def _failing(self, tickets: list[Ticket]):
@@ -522,12 +629,30 @@ class Server:
     # -- telemetry -----------------------------------------------------------
     def telemetry(self) -> dict:
         """Deadline accounting + queue/serving counters, machine-readable."""
-        return {**self.monitor.snapshot(),
+        snap = {**self.monitor.snapshot(),
                 "metrics": dict(self.metrics),
                 "queue_depths": self.queue_depths(),
                 "dropped": {n: st.queue.dropped
                             for n, st in self._nets.items()},
                 "hyperperiods_completed": self.hyperperiods_completed}
+        continuous = {n: {**st.cengine.metrics,
+                          "occupancy": st.cengine.state.occupancy,
+                          "slots": st.cengine.state.slots,
+                          "pending": len(st.cengine.pending)}
+                      for n, st in self._nets.items()
+                      if st.cengine is not None}
+        if continuous:
+            snap["continuous"] = continuous
+        sustained = {n: {"occupancy": st.sustained.occupancy,
+                         "token_capacity_tps":
+                             st.sustained.token_capacity_tps,
+                         "offered_load_tps": st.sustained.offered_load_tps,
+                         "schedulable": st.sustained.schedulable}
+                     for n, st in self._nets.items()
+                     if st.sustained is not None}
+        if sustained:
+            snap["sustained"] = sustained
+        return snap
 
     def summary(self) -> str:
         lines = [f"Server[{len(self._nets)} nets @ {self.machine.name}, "
@@ -610,7 +735,8 @@ class Server:
                           "deadline_s": st.spec.deadline_s,
                           "slots": st.slots,
                           "executable": n in deployments,
-                          "step_fn": st.step_fn is not None}
+                          "step_fn": st.step_fn is not None,
+                          "continuous": st.cengine is not None}
                          for n, st in self._nets.items()],
             "machine_fingerprint": self.machine.fingerprint(),
             "hyperperiod_s": self.compiled.hyperperiod_s,

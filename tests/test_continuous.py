@@ -1,0 +1,375 @@
+"""Continuous batching: DecodeState/ResultTokens invariants, the
+differential suite (continuous loop bit-exact vs the batch-to-completion
+oracle on the toy AND real-LM backends under randomized arrival orders and
+slot capacities), deadline accounting under continuous load, and the
+`Server.register_decode` integration."""
+
+import random
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.wcet import sustained_occupancy
+from repro.hw import scaled_paper_machine
+from repro.models import init_params
+from repro.serve import AdmissionError, DeadlineMonitor, Server
+from repro.serve.continuous import (ContinuousEngine, DecodeState, LMBackend,
+                                    ResultTokens, SlotError, ToyBackend,
+                                    result_from_packed, toy_reference)
+from repro.serve.engine import Request, ServeEngine
+
+
+# -- DecodeState invariants (deterministic; hypothesis variants in
+# -- tests/test_continuous_properties.py) -------------------------------------
+
+def _packed(tokens, valid, lengths):
+    return result_from_packed(np.stack(
+        [np.asarray(tokens), np.asarray(valid), np.asarray(lengths)], axis=1))
+
+
+def test_insert_occupied_slot_rejected():
+    st = DecodeState(2, 4)
+    st.insert(0, 10, first_token=5)
+    with pytest.raises(SlotError, match="occupied"):
+        st.insert(0, 11)
+    with pytest.raises(SlotError, match="out of range"):
+        st.insert(2, 12)
+
+
+def test_evicted_slot_immediately_reusable():
+    st = DecodeState(1, 4)
+    st.insert(0, 1, first_token=7)
+    assert list(st.evict(0)) == [7]
+    with pytest.raises(SlotError, match="already free"):
+        st.evict(0)
+    st.insert(0, 2, first_token=9)      # reuse without any reset call
+    assert list(st.tokens[0, :1]) == [9] and st.lengths[0] == 1
+
+
+def test_append_no_cross_slot_contamination():
+    st = DecodeState(3, 8)
+    st.insert(0, 100, first_token=1)
+    st.insert(2, 200, first_token=2)
+    st.append(_packed([11, 99, 22], [1, 1, 1], [2, 1, 2]))  # slot1 invalid
+    assert list(st.tokens[0, :2]) == [1, 11]
+    assert list(st.tokens[2, :2]) == [2, 22]
+    assert not st.valid[1] and st.lengths[1] == 0
+    assert np.all(st.tokens[1] == 0)    # the masked row never lands
+
+
+def test_lengths_monotone_and_overflow_guarded():
+    st = DecodeState(1, 3)
+    st.insert(0, 1, first_token=4)
+    seen = [int(st.lengths[0])]
+    for t in (5, 6):
+        st.append(_packed([t], [1], [seen[-1] + 1]))
+        seen.append(int(st.lengths[0]))
+    assert seen == [1, 2, 3]            # monotone +1 per live step
+    with pytest.raises(SlotError, match="overflow"):
+        st.append(_packed([7], [1], [4]))
+
+
+def test_result_tokens_partition_enforced():
+    data = np.zeros((2, 3), np.int32)
+    ResultTokens(data, (0, 1), (1, 2), (2, 3)).check_partition()
+    bad = [((0, 1), (1, 2), (1, 3)),    # overlap
+           ((0, 1), (2, 3), (2, 3)),    # gap + duplicate
+           ((0, 1), (1, 2), (2, 2))]    # empty range
+    for t_idx, v_idx, l_idx in bad:
+        with pytest.raises(SlotError, match="partition|cover"):
+            ResultTokens(data, t_idx, v_idx, l_idx).check_partition()
+    with pytest.raises(SlotError, match="cover"):
+        ResultTokens(np.zeros((2, 4), np.int32),
+                     (0, 1), (1, 2), (2, 3)).check_partition()
+
+
+def test_append_rejects_wrong_slot_count():
+    st = DecodeState(3, 4)
+    with pytest.raises(SlotError, match="slots"):
+        st.append(_packed([1, 2], [1, 1], [1, 1]))
+
+
+# -- differential: toy backend (numpy AND jax) --------------------------------
+
+@pytest.mark.parametrize("xp", ["numpy", "jax"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_toy_continuous_matches_reference(xp, seed):
+    """Randomized arrival orders and slot capacities: every request's token
+    stream is bit-identical to the pure-python batch-to-completion oracle."""
+    rng = random.Random(seed)
+    slots = rng.choice([1, 2, 3, 5])
+    n = rng.randint(4, 12)
+    prompts = [[rng.randint(1, 200) for _ in range(rng.randint(1, 6))]
+               for _ in range(n)]
+    max_new = [rng.randint(1, 10) for _ in range(n)]
+    expect = toy_reference(prompts, max_new)
+
+    eng = ContinuousEngine(ToyBackend(slots=slots, xp=xp), max_tokens=12,
+                           prefill_per_step=rng.choice([1, 2]))
+    order = list(range(n))
+    rng.shuffle(order)
+    reqs = {}
+    for i in order:                     # interleave arrivals with decode
+        reqs[i] = eng.enqueue(prompts[i], max_new[i], rid=i)
+        if rng.random() < 0.7:
+            eng.step()
+    eng.drain()
+    for i in range(n):
+        assert reqs[i].out == expect[i], f"request {i} diverged"
+
+
+def test_toy_numpy_jax_backends_bit_identical():
+    prompts = [[3, 1, 4], [1, 5], [9]]
+    max_new = [6, 4, 8]
+    outs = {}
+    for xp in ("numpy", "jax"):
+        eng = ContinuousEngine(ToyBackend(slots=2, xp=xp), max_tokens=8)
+        reqs = [eng.enqueue(p, m) for p, m in zip(prompts, max_new)]
+        eng.drain()
+        outs[xp] = [r.out for r in reqs]
+    assert outs["numpy"] == outs["jax"]
+
+
+# -- differential: real LM vs ServeEngine.serve oracle ------------------------
+
+PROMPT_LEN, MAX_LEN = 6, 64
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = get_config("smollm-135m", reduced=True)
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+def test_serve_oracle_grouping_independent(lm):
+    """`ServeEngine.serve` with a fixed prompt_len gives the same streams
+    regardless of batch grouping — the property that makes it an oracle."""
+    cfg, params = lm
+    mk = lambda: [Request(rid=i, prompt=[7 + 3 * i, 2], max_new_tokens=5)
+                  for i in range(5)]
+    outs = {}
+    for bs in (2, 4):
+        done = ServeEngine(cfg, params, batch_size=bs, max_len=MAX_LEN
+                           ).serve(mk(), prompt_len=PROMPT_LEN)
+        outs[bs] = {r.rid: r.out for r in done}
+    assert outs[2] == outs[4]
+
+
+def test_serve_oracle_rejects_overlong_prompt(lm):
+    cfg, params = lm
+    eng = ServeEngine(cfg, params, batch_size=2, max_len=MAX_LEN)
+    with pytest.raises(ValueError, match="exceeds prompt_len"):
+        eng.serve([Request(rid=0, prompt=[1] * 4, max_new_tokens=2)],
+                  prompt_len=3)
+
+
+@pytest.mark.parametrize("seed,slots", [(0, 2), (1, 3)])
+def test_lm_continuous_bit_exact_vs_oracle(lm, seed, slots):
+    """The tentpole's acceptance property: continuous batching over the
+    real LM step functions is token-for-token identical to the
+    batch-to-completion oracle under randomized arrival order."""
+    cfg, params = lm
+    rng = random.Random(seed)
+    n = 6
+    prompts = [[rng.randint(1, 500) for _ in range(rng.randint(1, PROMPT_LEN))]
+               for _ in range(n)]
+    max_new = [rng.randint(1, 8) for _ in range(n)]
+
+    oracle = [Request(rid=i, prompt=list(p), max_new_tokens=m)
+              for i, (p, m) in enumerate(zip(prompts, max_new))]
+    ServeEngine(cfg, params, batch_size=4, max_len=MAX_LEN
+                ).serve(oracle, prompt_len=PROMPT_LEN)
+    expect = {r.rid: r.out for r in oracle}
+
+    backend = LMBackend(cfg, params, slots=slots, prompt_len=PROMPT_LEN,
+                        max_len=MAX_LEN)
+    eng = ContinuousEngine(backend, max_tokens=8, prefill_per_step=2)
+    order = list(range(n))
+    rng.shuffle(order)
+    reqs = {}
+    for i in order:
+        reqs[i] = eng.enqueue(prompts[i], max_new[i], rid=i)
+        eng.step()                      # arrivals interleave with decode
+    eng.drain()
+    for i in range(n):
+        assert reqs[i].out == expect[i], f"request {i} diverged"
+
+
+def test_lm_backend_rejects_encdec_and_bad_shapes(lm):
+    cfg, params = lm
+    encdec = get_config("seamless-m4t-medium", reduced=True)
+    with pytest.raises(NotImplementedError, match="encdec"):
+        LMBackend(encdec, None, slots=2, prompt_len=4, max_len=32)
+    with pytest.raises(ValueError, match="decode room"):
+        LMBackend(cfg, params, slots=2, prompt_len=8, max_len=8)
+    be = LMBackend(cfg, params, slots=2, prompt_len=4, max_len=32)
+    with pytest.raises(ValueError, match="prompt length"):
+        be.prefill([1] * 5)
+
+
+# -- deadline accounting under continuous load --------------------------------
+
+def _toy_engine(monitor, *, slots=2, step_bound=1.0, default_deadline=None):
+    return ContinuousEngine(ToyBackend(slots=slots), max_tokens=8,
+                            prefill_per_step=slots, monitor=monitor,
+                            step_bound_s=step_bound,
+                            default_deadline_s=default_deadline,
+                            network="toy")
+
+
+def test_miss_counts_match_hand_computed_trace():
+    """2 slots, 2 requests of 3 tokens, both enqueued up front:
+    step 1 prefills both (token 1 each) + decodes (token 2); step 2
+    decodes (token 3, both finish). Exactly 2 decode steps => 2 checks,
+    and with a vanishingly small pinned speed ratio every check misses —
+    misses MUST equal checks (per-step counting, the PR-5 fix)."""
+    mon = DeadlineMonitor(speed_ratio=1e-12)
+    eng = _toy_engine(mon, default_deadline=1.0)
+    r1 = eng.enqueue([5, 6], 3)
+    r2 = eng.enqueue([7], 3)
+    eng.drain()
+    assert r1.done and r2.done
+    assert eng.metrics["decode_steps"] == 2
+    assert mon.checks["toy"] == 2
+    assert mon.misses["toy"] == 2       # every step counted, none coalesced
+    assert r1.verdict.missed and r2.verdict.missed
+
+
+def test_zero_misses_under_generous_ratio():
+    mon = DeadlineMonitor(speed_ratio=1e9)
+    eng = _toy_engine(mon, default_deadline=1.0)
+    for i in range(5):
+        eng.enqueue([i + 1], 4)
+    eng.drain()
+    assert mon.checks["toy"] == eng.metrics["decode_steps"] > 0
+    assert mon.misses.get("toy", 0) == 0
+    assert all(r.verdict.met for r in eng.completed)
+
+
+def test_mid_stream_request_judged_against_own_deadline():
+    """A request admitted while another is mid-decode gets its verdict
+    against its OWN deadline — and per-request judging never perturbs the
+    schedule-level check/miss counters."""
+    mon = DeadlineMonitor(speed_ratio=1.0)
+    eng = _toy_engine(mon, slots=2, default_deadline=1e6)
+    eng.enqueue([1, 2], 6)
+    eng.step()                          # first request is now mid-stream
+    late = eng.enqueue([3], 3, deadline_s=1e-9)   # impossible deadline
+    eng.drain()
+    checks, misses = mon.checks["toy"], mon.misses.get("toy", 0)
+    assert late.verdict.missed and late.verdict.deadline_s == 1e-9
+    first = eng.completed[-1] if eng.completed[-1] is not late \
+        else eng.completed[0]
+    assert first.verdict.met and first.verdict.deadline_s == 1e6
+    # judge() is count-free: counters reflect decode steps only
+    assert checks == eng.metrics["decode_steps"]
+    assert misses == 0
+
+
+def test_occupancy_recorded_per_decode_step():
+    mon = DeadlineMonitor(speed_ratio=1e9)
+    eng = _toy_engine(mon, slots=4)
+    eng.enqueue([1], 3)
+    eng.enqueue([2], 3)
+    eng.drain()
+    # both admitted at step 1 -> occupancy 2/4 on every decode step
+    assert mon.mean_occupancy("toy") == pytest.approx(0.5)
+    snap = mon.snapshot()["networks"]["toy"]
+    assert snap["mean_occupancy"] == pytest.approx(0.5)
+    assert snap["slot_capacity"] == 4
+    with pytest.raises(ValueError, match="not in"):
+        mon.record_occupancy("toy", 5, 4)
+
+
+# -- sustained-occupancy admission math ---------------------------------------
+
+def test_sustained_occupancy_math():
+    v = sustained_occupancy("lm", slots=8, period_s=0.05, step_bound_s=0.01,
+                            arrival_rps=4.0, tokens_per_request=20.0)
+    assert v.token_capacity_tps == pytest.approx(160.0)
+    assert v.offered_load_tps == pytest.approx(80.0)
+    assert v.occupancy == pytest.approx(0.5)
+    assert v.step_fits and v.schedulable
+    over = sustained_occupancy("lm", slots=8, period_s=0.05,
+                               step_bound_s=0.01, arrival_rps=10.0,
+                               tokens_per_request=20.0)
+    assert over.occupancy > 1.0 and not over.schedulable
+    slow = sustained_occupancy("lm", slots=8, period_s=0.05,
+                               step_bound_s=0.06, arrival_rps=1.0,
+                               tokens_per_request=1.0)
+    assert not slow.step_fits and not slow.schedulable
+    assert "NOT SUSTAINABLE" in slow.summary()
+    with pytest.raises(ValueError, match="period_s"):
+        sustained_occupancy("lm", slots=1, period_s=0.0, step_bound_s=0.01,
+                            arrival_rps=1.0, tokens_per_request=1.0)
+
+
+# -- Server integration -------------------------------------------------------
+
+def test_server_register_decode_serves_continuously(lm):
+    cfg, params = lm
+    srv = Server(scaled_paper_machine(4), speed_ratio=1e9)
+    verdict = srv.register_decode(
+        "lm", cfg, period_s=0.05, params=params, slots=3,
+        prompt_len=PROMPT_LEN, max_new_tokens=8, max_len=MAX_LEN,
+        prefill_per_step=2, arrival_rps=10.0, tokens_per_request=5.0)
+    assert verdict.schedulable
+
+    expect_reqs = [Request(rid=i, prompt=[1 + i, 2, 3], max_new_tokens=5)
+                   for i in range(4)]
+    ServeEngine(cfg, params, batch_size=4, max_len=MAX_LEN
+                ).serve(expect_reqs, prompt_len=PROMPT_LEN)
+    expect = {r.rid: r.out for r in expect_reqs}
+
+    tickets = {}
+    for i in range(2):
+        tickets[i] = srv.submit("lm", [1 + i, 2, 3])
+    mid = None
+    for _ in range(40):
+        srv.step()
+        if mid is None:                 # arrive mid-stream
+            mid = {i: srv.submit(
+                "lm", {"prompt": [1 + i, 2, 3], "max_new_tokens": 5},
+                deadline_s=123.0) for i in (2, 3)}
+        if all(t.done for t in tickets.values()) and \
+                all(t.done for t in mid.values()):
+            break
+    for i, t in {**tickets, **mid}.items():
+        r = t.result()
+        assert r.output[:5] == expect[i][:5]
+        assert r.verdict.met
+    assert mid[2].result().verdict.deadline_s == 123.0
+    tel = srv.telemetry()
+    assert tel["continuous"]["lm"]["evictions"] == 4
+    assert tel["sustained"]["lm"]["schedulable"]
+    assert 0 < tel["networks"]["lm"]["mean_occupancy"] <= 1
+    assert "occ=" in srv.summary()
+
+
+def test_server_rejects_oversubscribed_decode_net(lm):
+    cfg, params = lm
+    srv = Server(scaled_paper_machine(4), speed_ratio=1e9)
+    with pytest.raises(AdmissionError, match="oversubscribes"):
+        srv.register_decode("lm", cfg, period_s=0.05, params=params,
+                            slots=1, prompt_len=4, max_new_tokens=8,
+                            max_len=MAX_LEN, arrival_rps=100.0)
+    assert srv.networks == []           # atomic rollback
+
+
+def test_server_decode_ticket_failure_is_contained(lm):
+    cfg, params = lm
+    srv = Server(scaled_paper_machine(4), speed_ratio=1e9)
+    srv.register_decode("lm", cfg, period_s=0.05, params=params, slots=2,
+                        prompt_len=4, max_new_tokens=4, max_len=MAX_LEN)
+    bad = srv.submit("lm", [1] * 9)     # longer than prompt_len
+    with pytest.raises(ValueError, match="prompt length"):
+        srv.step()
+    assert bad.status == "failed" and "prompt length" in bad.error
+    good = srv.submit("lm", [1, 2])
+    for _ in range(10):
+        srv.step()
+        if good.done:
+            break
+    assert len(good.result().output) == 4

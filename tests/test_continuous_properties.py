@@ -1,0 +1,127 @@
+"""DecodeState/ResultTokens invariants under hypothesis-generated
+insert/evict/append interleavings: no cross-slot contamination, monotone
+per-slot lengths, immediate slot reuse after evict, and packed index
+ranges that exactly partition the transferred buffer. (Deterministic
+variants of each invariant run without hypothesis in
+tests/test_continuous.py, so tier-1 still exercises them.)"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+
+import hypothesis.strategies as st          # noqa: E402
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+
+from repro.serve.continuous import (ContinuousEngine, DecodeState,
+                                    ResultTokens, SlotError, ToyBackend,
+                                    result_from_packed, toy_reference)
+
+
+@st.composite
+def op_sequences(draw):
+    """A DecodeState geometry plus a random op script over it."""
+    slots = draw(st.integers(1, 5))
+    max_tokens = draw(st.integers(2, 6))
+    ops = draw(st.lists(
+        st.one_of(
+            st.tuples(st.just("insert"), st.integers(0, slots - 1),
+                      st.integers(1, 1000)),
+            st.tuples(st.just("evict"), st.integers(0, slots - 1),
+                      st.just(0)),
+            st.tuples(st.just("append"), st.just(0),
+                      st.integers(1, 1000))),
+        min_size=1, max_size=30))
+    return slots, max_tokens, ops
+
+
+@settings(max_examples=60, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(seq=op_sequences())
+def test_slot_isolation_and_monotone_lengths(seq):
+    """Whatever the interleaving, each slot's buffer holds exactly the
+    tokens its own request produced, lengths never decrease while a slot
+    is occupied, and evicted slots are immediately insertable."""
+    slots, max_tokens, ops = seq
+    state = DecodeState(slots, max_tokens)
+    shadow = {}                          # slot -> (rid, expected tokens)
+    next_rid = 0
+    for op, slot, arg in ops:
+        if op == "insert":
+            if state.valid[slot]:
+                with pytest.raises(SlotError):
+                    state.insert(slot, next_rid)
+                state.evict(slot)
+                shadow.pop(slot)
+            state.insert(slot, next_rid, first_token=arg)
+            shadow[slot] = (next_rid, [arg])   # reuse needs no reset call
+            next_rid += 1
+        elif op == "evict":
+            if not state.valid[slot]:
+                with pytest.raises(SlotError):
+                    state.evict(slot)
+                continue
+            got = list(state.evict(slot))
+            assert got == shadow.pop(slot)[1]
+        else:                            # append one packed step
+            room = state.valid & (state.lengths < max_tokens)
+            if not room.all() and state.valid[~room].any():
+                continue                 # a full slot would overflow
+            before = state.lengths.copy()
+            toks = np.arange(slots, dtype=np.int32) + arg
+            state.append(result_from_packed(np.stack(
+                [toks, state.valid.astype(np.int32),
+                 before + state.valid], axis=1)))
+            for s in range(slots):
+                if state.valid[s]:
+                    shadow[s][1].append(int(toks[s]))
+                    assert state.lengths[s] == before[s] + 1  # monotone
+                else:
+                    assert state.lengths[s] == 0
+    for s, (rid, toks) in shadow.items():
+        assert state.request_ids[s] == rid
+        assert list(state.tokens[s, :len(toks)]) == toks
+    free = [s for s in range(slots) if s not in shadow]
+    assert sorted(state.free_slots()) == sorted(free)
+
+
+@settings(max_examples=60, deadline=None)
+@given(slots=st.integers(1, 8), width=st.integers(1, 6),
+       cuts=st.tuples(st.integers(0, 6), st.integers(0, 6)),
+       order=st.permutations([0, 1, 2]))
+def test_packed_ranges_must_exactly_partition(slots, width, cuts, order):
+    """check_partition accepts exactly the (0,a),(a,b),(b,width) splits
+    with 0 < a < b < width (in any role order) and rejects all else."""
+    a, b = sorted(cuts)
+    ranges = [(0, a), (a, b), (b, width)]
+    named = [ranges[i] for i in order]
+    rt = ResultTokens(np.zeros((slots, width), np.int32), *named)
+    if 0 < a < b < width:
+        rt.check_partition()
+    else:
+        with pytest.raises(SlotError):
+            rt.check_partition()
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(data=st.data(), slots=st.integers(1, 4),
+       prefill_per_step=st.integers(1, 3))
+def test_toy_engine_always_matches_reference(data, slots, prefill_per_step):
+    """End-to-end loop property: for ANY request set and arrival pattern
+    the continuous engine reproduces the batch-to-completion oracle."""
+    n = data.draw(st.integers(1, 8))
+    prompts = [data.draw(st.lists(st.integers(1, 200), min_size=1,
+                                  max_size=5)) for _ in range(n)]
+    max_new = [data.draw(st.integers(1, 6)) for _ in range(n)]
+    eng = ContinuousEngine(ToyBackend(slots=slots), max_tokens=6,
+                           prefill_per_step=prefill_per_step)
+    reqs = []
+    for p, m in zip(prompts, max_new):
+        reqs.append(eng.enqueue(p, m))
+        if data.draw(st.booleans()):
+            eng.step()
+    eng.drain()
+    for r, expect in zip(reqs, toy_reference(prompts, max_new)):
+        assert r.out == expect

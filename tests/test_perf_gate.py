@@ -4,10 +4,13 @@ comparison logic + the committed baseline artifact's schema."""
 import json
 import pathlib
 
-from benchmarks.check_regression import GATED_KEYS, check
+from benchmarks.check_regression import (GATED_KEYS, SERVE_GATED_KEYS, check,
+                                         check_serve)
 
 BASELINE = pathlib.Path(__file__).parent.parent / "benchmarks" / \
     "baseline_executor.json"
+SERVE_BASELINE = pathlib.Path(__file__).parent.parent / "benchmarks" / \
+    "baseline_serve.json"
 
 
 def _row(preset, np_s=3.0, jax_s=3.0):
@@ -46,3 +49,33 @@ def test_committed_baseline_covers_smoke_presets():
     # the baseline gates itself: identity comparison always passes
     ok, _ = check(baseline, baseline, threshold=0.7)
     assert ok
+
+
+def test_serve_gate_passes_and_fails_on_speedup():
+    base = {"continuous": {"continuous_speedup": 1.5, "miss_rate": 0.0}}
+    ok, rows = check_serve({"continuous": {"continuous_speedup": 1.06}},
+                           base, 0.7)
+    assert ok and len(rows) == len(SERVE_GATED_KEYS)
+    ok, rows = check_serve({"continuous": {"continuous_speedup": 1.04}},
+                           base, 0.7)
+    assert not ok and rows[0][-1] is False
+    ok, rows = check_serve({"continuous": {}}, base, 0.7)
+    assert not ok and rows[0][3] is None
+    # no serve baseline stats -> nothing gated, vacuously ok
+    ok, rows = check_serve({"continuous": {}}, {}, 0.7)
+    assert ok and rows == []
+
+
+def test_committed_serve_baseline_schema():
+    """The committed serve baseline must carry every gated key, show the
+    continuous loop actually beating the static path (the tentpole's
+    acceptance floor), and gate itself."""
+    with open(SERVE_BASELINE) as f:
+        baseline = json.load(f)
+    stats = baseline["continuous"]
+    for key in SERVE_GATED_KEYS:
+        assert float(stats[key]) > 0
+    assert stats["continuous_speedup"] >= 1.3
+    assert stats["miss_rate"] == 0.0
+    ok, rows = check_serve(baseline, baseline, threshold=0.7)
+    assert ok and len(rows) == len(SERVE_GATED_KEYS)

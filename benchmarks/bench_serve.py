@@ -14,6 +14,14 @@ Sections (all emit into ``BENCH_serve.json``):
     miss rate, and the ``continuous_speedup`` ratio the CI perf gate
     holds against ``benchmarks/baseline_serve.json``. The two paths MUST
     be token-for-token identical (`BackendMismatch` otherwise).
+  * **overload** — a seeded overload burst against a mixed-criticality
+    taskset (high-crit CNN + low-crit LM) with fault injection on the
+    low-criticality network: the burst floods the low-crit queue past
+    the `OverloadPolicy` shed threshold, recovery restores it, and the
+    stats record sheds/restores/drops/degrades/retries plus the
+    high-criticality miss rate. `check_regression.py` holds this
+    section to an ABSOLUTE gate: zero high-criticality deadline misses
+    and every ticket terminal.
   * full mode only: the per-token decode WCET table for the assigned LM
     archs + raw `ServeEngine` throughput (absorbed from the retired
     ``bench_serving`` section).
@@ -35,7 +43,8 @@ from repro.core.lmgraph import lm_decode_graph
 from repro.core.taskset import hyperperiod
 from repro.hw import TPU_V5E, scaled_paper_machine
 from repro.models.config import ModelConfig
-from repro.serve import DeadlineMonitor, Server
+from repro.serve import (BreakerPolicy, DeadlineMonitor, FaultPlan,
+                         OverloadPolicy, RetryPolicy, Server)
 
 from .bench_executor import BackendMismatch
 
@@ -226,6 +235,121 @@ def _run_continuous(csv_rows: list, smoke: bool) -> dict:
     return stats
 
 
+def _run_overload(csv_rows: list, smoke: bool) -> dict:
+    """Seeded overload burst against a mixed-criticality taskset; returns
+    the stats dict for BENCH_serve.json["overload"] (absolute CI gate:
+    zero high-criticality misses, every ticket terminal)."""
+    calm, burst, recover = (2, 3, 4) if smoke else (4, 6, 8)
+    srv = Server(HW, backend="numpy", num_cores=8, queue_capacity=8,
+                 queue_policy="drop-oldest",
+                 overload=OverloadPolicy(shed_queue_frac=0.75,
+                                         restore_queue_frac=0.25,
+                                         restore_hyperperiods=2))
+    srv.register("cnn_hi", cnn.small_cnn(h=24, w=24), CNN_PERIOD,
+                 slots=CNN_SLOTS, criticality=2)
+    srv.register("lm_lo", _lm_graph(), LM_PERIOD, criticality=0,
+                 step_fn=_lm_step_fn())
+    # drive the load by modeled DURATION, not program hyperperiods: once
+    # lm_lo is shed the active program's hyperperiod shrinks (cnn-only),
+    # and a per-hyperperiod loop would halve the served cnn traffic and
+    # keep the queues from ever reaching the calm restore threshold
+    full_hp = srv.compiled.hyperperiod_s
+    hi_per_hp = round(full_hp / CNN_PERIOD) * CNN_SLOTS
+
+    print(f"\n== Overload burst: mixed criticality (cnn_hi crit=2, lm_lo "
+          f"crit=0), seeded faults on lm_lo, {calm}+{burst}+{recover} "
+          f"hyperperiods ==")
+
+    # warmup (compile + calibration), then pin the ratio with a generous
+    # jitter margin: this section gates SCHEDULING behavior (shed/restore
+    # keeping the high-crit network clean), not host timing noise
+    for _ in range(CNN_SLOTS):
+        srv.submit("cnn_hi", _frame_for(0))
+    srv.submit("lm_lo", 0)
+    srv.run(hyperperiods=1)
+    ratio = srv.monitor.speed_ratio
+    srv.monitor.reset(recalibrate=True)
+    srv.monitor.pin(10.0 * ratio)
+    srv.enable_resilience(
+        faults=FaultPlan(seed=5, fail_rate=0.2, timeout_rate=0.1,
+                         networks=("lm_lo",)),
+        retry=RetryPolicy(max_retries=1),
+        breaker=BreakerPolicy(threshold=3, cooldown_jobs=2))
+
+    tickets, seq = [], 0
+    # calm: both networks at steady drained load
+    for _ in range(calm):
+        for _ in range(hi_per_hp):
+            tickets.append(srv.submit("cnn_hi", _frame_for(seq)))
+            seq += 1
+        tickets.append(srv.submit("lm_lo", seq))
+        srv.run(duration_s=full_hp)
+    # burst: flood the low-criticality queue past the shed threshold
+    # (9 arrivals into a capacity-8 drop-oldest queue also exercises the
+    # eviction path before the boundary sheds the network outright)
+    for _ in range(burst):
+        for _ in range(hi_per_hp):
+            tickets.append(srv.submit("cnn_hi", _frame_for(seq)))
+            seq += 1
+        for _ in range(9):
+            tickets.append(srv.submit("lm_lo", seq))
+            seq += 1
+        srv.run(duration_s=full_hp)
+    # recovery: load recedes below the restore threshold; the shed
+    # network is hysteretically re-admitted after consecutive calm
+    # boundaries and its traffic serves again (with faults still armed)
+    for _ in range(recover):
+        for _ in range(CNN_SLOTS):
+            tickets.append(srv.submit("cnn_hi", _frame_for(seq)))
+            seq += 1
+        tickets.append(srv.submit("lm_lo", seq))
+        seq += 1
+        srv.run(duration_s=full_hp)
+    while any(srv.queue_depths().values()):
+        srv.run(duration_s=full_hp)
+
+    snap = srv.monitor.snapshot()
+    hi = snap["networks"].get("cnn_hi", {})
+    m = srv.metrics
+    terminal = sum(1 for t in tickets if t.terminal)
+    hi_tickets = [t for t in tickets if t.network == "cnn_hi"]
+    stats = {
+        "hyperperiods": calm + burst + recover,
+        "tickets": len(tickets),
+        "terminal": terminal,
+        "hi_tickets": len(hi_tickets),
+        "hi_served": sum(1 for t in hi_tickets if t.done),
+        "hi_checks": hi.get("checks", 0),
+        "hi_misses": hi.get("misses", 0),
+        "hi_miss_rate": hi.get("miss_rate", 0.0),
+        "sheds": m["sheds"],
+        "restores": m["restores"],
+        "dropped": m["dropped"],
+        "degraded": m["degraded"],
+        "retries": m["retries"],
+        "injected": dict(srv.resilience.injector.injected),
+        "breaker_opens": srv.monitor.event_count("breaker_open"),
+    }
+    print(f"  tickets={stats['tickets']} (terminal {terminal}), "
+          f"hi misses={stats['hi_misses']}/{stats['hi_checks']}, "
+          f"sheds={m['sheds']} restores={m['restores']} "
+          f"dropped={m['dropped']} degraded={m['degraded']} "
+          f"retries={m['retries']} injected={stats['injected']}")
+    if terminal != len(tickets):
+        raise RuntimeError(
+            f"overload burst left {len(tickets) - terminal} tickets "
+            f"non-terminal")
+    csv_rows.append(("serve_overload/burst", stats["hi_misses"],
+                     f"sheds={m['sheds']};restores={m['restores']};"
+                     f"dropped={m['dropped']};degraded={m['degraded']}"))
+    return stats
+
+
+def _frame_for(seed: int):
+    rng = np.random.default_rng(seed)
+    return rng.integers(-64, 64, (24, 24, 3)).astype(np.int8)
+
+
 def _run_wcet_table(csv_rows: list) -> None:
     """Per-token decode WCET bounds for the assigned LM archs + raw engine
     throughput (the retired bench_serving section, full mode only)."""
@@ -314,10 +438,12 @@ def run(csv_rows: list, smoke: bool = False) -> None:
           + ", ".join(BACKENDS))
 
     continuous = _run_continuous(csv_rows, smoke)
+    overload = _run_overload(csv_rows, smoke)
     if not smoke:
         _run_wcet_table(csv_rows)
 
     with open("BENCH_serve.json", "w") as f:
         json.dump({"machine": HW.name, "results": results,
-                   "continuous": continuous}, f, indent=2)
+                   "continuous": continuous, "overload": overload},
+                  f, indent=2)
     print("wrote BENCH_serve.json")

@@ -8,6 +8,13 @@ When ``benchmarks/baseline_serve.json`` exists, the serve gate also runs:
 the continuous-batching speedup in ``BENCH_serve.json`` (written by
 ``benchmarks.bench_serve``) is held to the same relative floor.
 
+The overload-burst section of ``BENCH_serve.json`` is held to an
+ABSOLUTE robustness gate (no baseline involved): under the seeded
+overload burst the high-criticality network must show zero deadline
+misses with every submitted ticket reaching a terminal state, and the
+burst must actually exercise the shed/restore machinery (>= 1 each) —
+otherwise the run silently stopped testing what it claims to.
+
 The gated metrics are *speedups measured in the same process* — a ratio
 of two timings on the same machine (compiled backend vs seed interpreter;
 continuous batching vs static batch-to-completion) — so they are robust
@@ -84,6 +91,44 @@ def check_serve(current: dict, baseline: dict, threshold: float = 0.7):
     return ok, rows
 
 
+def check_overload(current: dict):
+    """Absolute robustness gate over ``BENCH_serve.json["overload"]``.
+
+    Returns (ok, checks); checks are (description, value, ok) rows. An
+    absent section passes vacuously (older benchmark output)."""
+    stats = current.get("overload")
+    if stats is None:
+        return True, []
+    checks = [
+        (
+            "hi_misses == 0 (high-crit deadline misses under burst)",
+            stats.get("hi_misses"),
+            stats.get("hi_misses") == 0,
+        ),
+        (
+            "hi_served == hi_tickets (no high-crit ticket lost)",
+            stats.get("hi_served"),
+            stats.get("hi_served") == stats.get("hi_tickets"),
+        ),
+        (
+            "terminal == tickets (every ticket reached a terminal state)",
+            stats.get("terminal"),
+            stats.get("terminal") == stats.get("tickets"),
+        ),
+        (
+            "sheds >= 1 (the burst tripped overload shedding)",
+            stats.get("sheds"),
+            (stats.get("sheds") or 0) >= 1,
+        ),
+        (
+            "restores >= 1 (recovery re-admitted the shed network)",
+            stats.get("restores"),
+            (stats.get("restores") or 0) >= 1,
+        ),
+    ]
+    return all(ok for _, _, ok in checks), checks
+
+
 def _print_rows(rows) -> None:
     for preset, key, base, cur, floor, row_ok in rows:
         cur_s = "MISSING" if cur is None else f"{cur:8.1f}x"
@@ -116,9 +161,11 @@ def main(argv=None) -> int:
     with open(args.baseline) as f:
         baseline = json.load(f)
     ok, rows = check(current, baseline, args.threshold)
-    if os.path.exists(args.serve_baseline):
+    serve_current = None
+    if os.path.exists(args.serve_current):
         with open(args.serve_current) as f:
             serve_current = json.load(f)
+    if serve_current is not None and os.path.exists(args.serve_baseline):
         with open(args.serve_baseline) as f:
             serve_baseline = json.load(f)
         serve_ok, serve_rows = check_serve(
@@ -128,11 +175,22 @@ def main(argv=None) -> int:
         rows = rows + serve_rows
     else:
         print(f"note: {args.serve_baseline} not found; serve gate skipped")
+    overload_checks = []
+    if serve_current is not None:
+        overload_ok, overload_checks = check_overload(serve_current)
+        ok = ok and overload_ok
     print(
         f"{'preset':<20}{'metric':<26}{'baseline':>9}{'floor':>8}"
         f"{'current':>9}  verdict"
     )
     _print_rows(rows)
+    if overload_checks:
+        print("overload robustness gate (absolute):")
+        for desc, value, row_ok in overload_checks:
+            print(
+                f"  {desc:<60} value={value}  "
+                f"{'ok' if row_ok else 'FAILED'}"
+            )
     if not ok:
         print(
             "perf gate FAILED: a gated speedup regressed below "

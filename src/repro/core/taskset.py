@@ -51,12 +51,20 @@ class TasksetError(ValueError):
 
 @dataclasses.dataclass(frozen=True)
 class NetworkSpec:
-    """One periodic network: release a job every `period_s` seconds."""
+    """One periodic network: release a job every `period_s` seconds.
+
+    `criticality` ranks networks for degraded-mode operation (higher =
+    more critical): under overload the serving runtime sheds the
+    lowest-criticality networks first and restores them last, so the
+    high-criticality set keeps its deadline guarantees. It does not
+    affect the schedule itself — every admitted network gets the same
+    interference-free WCET treatment."""
 
     name: str
     graph: Graph
     period_s: float
     deadline_s: float | None = None      # None -> implicit deadline = period
+    criticality: int = 0                 # higher sheds later under overload
 
     @property
     def deadline(self) -> float:

@@ -148,6 +148,7 @@ class NetworkVerdict:
     n_jobs: int
     response_bound_s: float              # max job response (WCET times)
     num_subtasks: int                    # per job
+    criticality: int = 0                 # from NetworkSpec (shed order)
 
     @property
     def schedulable(self) -> bool:
@@ -162,6 +163,7 @@ class NetworkVerdict:
                 f"D={self.deadline_s * 1e3:7.2f} ms  "
                 f"R={self.response_bound_s * 1e3:7.2f} ms  "
                 f"slack={self.slack_s * 1e3:+8.2f} ms  "
+                f"crit={self.criticality}  "
                 f"{'OK' if self.schedulable else 'MISS'}")
 
 
@@ -214,6 +216,16 @@ class TasksetReport:
         """All per-network response bounds, keyed by network name."""
         return {n.name: n.response_bound_s for n in self.networks}
 
+    def shed_order(self) -> list[str]:
+        """Network names in degraded-mode shedding order: lowest
+        criticality first, largest response bound first within a level
+        (shedding the heaviest job frees the most schedule), name as the
+        deterministic tiebreak. The serving runtime sheds from the front
+        of this list and restores from the back."""
+        return [n.name for n in sorted(
+            self.networks,
+            key=lambda n: (n.criticality, -n.response_bound_s, n.name))]
+
     def summary(self) -> str:
         lines = [
             f"Taskset[{len(self.networks)} nets on {self.hw_name} "
@@ -251,7 +263,8 @@ def analyze_taskset(specs: list[NetworkSpec], hw: HardwareModel,
             name=spec.name, period_s=spec.period_s, deadline_s=spec.deadline,
             n_jobs=len(jobs),
             response_bound_s=max(j.response for j in jobs),
-            num_subtasks=len(jobs[0].sids)))
+            num_subtasks=len(jobs[0].sids),
+            criticality=spec.criticality))
 
     report = TasksetReport(
         hw_name=hw.name, num_cores=compiled.mapping.num_cores,

@@ -14,22 +14,37 @@ multi-network execution in `Server`. LM decode traffic is served
 *continuously* (`repro.serve.continuous`): `Server.register_decode`
 installs a slot-indexed `ContinuousEngine` where requests enter and
 leave the batch mid-stream. See docs/serving.md.
+
+Degraded operation is first-class (docs/serving.md, "Failure modes &
+degraded operation"): mixed-criticality overload shedding
+(`OverloadPolicy`), atomic hyperperiod-boundary mode changes
+(`repro.serve.modes.Mode` / `Server.switch_mode`), and seeded fault
+injection with bounded retries and per-network circuit breaking
+(`repro.serve.faults` / `Server.enable_resilience`).
 """
 
 from .continuous import (ContinuousEngine, ContinuousRequest, DecodeState,
                          LMBackend, ResultTokens, SlotError, StepInfo,
                          ToyBackend)
 from .engine import BatchedInferenceEngine, Request, ServeEngine
+from .faults import (BreakerPolicy, CircuitBreaker, FaultInjector,
+                     FaultPlan, InjectedFailure, InjectedTimeout,
+                     RetryPolicy, StragglerWatchdog)
+from .modes import Mode, ModeChangeError, ModeNetwork
 from .monitor import DeadlineMonitor, DeadlineVerdict
 from .predictable import (AdmissionError, MultiModelEngine,
                           PredictableEngine, PredictableServeReport,
                           analyze_decode)
-from .runtime import (BackpressureError, RequestQueue, ServeError, Server,
-                      Ticket, TicketResult)
+from .runtime import (BackpressureError, OverloadPolicy, RequestQueue,
+                      ServeError, Server, Ticket, TicketResult)
 
 __all__ = ["Server", "Ticket", "TicketResult", "RequestQueue",
            "ServeError", "AdmissionError", "BackpressureError",
            "DeadlineMonitor", "DeadlineVerdict",
+           "OverloadPolicy", "Mode", "ModeNetwork", "ModeChangeError",
+           "FaultPlan", "FaultInjector", "InjectedFailure",
+           "InjectedTimeout", "RetryPolicy", "BreakerPolicy",
+           "CircuitBreaker", "StragglerWatchdog",
            "BatchedInferenceEngine", "Request", "ServeEngine",
            "PredictableEngine", "PredictableServeReport", "analyze_decode",
            "MultiModelEngine",

@@ -522,6 +522,16 @@ class ContinuousEngine:
     occupancy is recorded, and each finished request gets a
     `DeadlineVerdict` against its OWN deadline (requests entering
     mid-stream included) without touching the step counters.
+
+    Fault hooks (for chaos runs outside a `Server`, whose resilience
+    layer injects at the job level instead): `fault_hook` is called at
+    the very top of `step()` — BEFORE any state mutation, so a raising
+    hook (`faults.FaultInjector.before_call`) leaves the loop resumable
+    and a clean retry is just calling `step()` again. A hook returning
+    "spike" inflates the measured decode latency by `spike_factor`
+    before the monitor check. A `StragglerWatchdog` on `watchdog`
+    observes every decode step's latency and counts flagged steps as
+    "straggler" events on the monitor.
     """
 
     def __init__(self, backend: DecodeBackend, *, max_tokens: int,
@@ -530,7 +540,10 @@ class ContinuousEngine:
                  step_bound_s: float | None = None,
                  default_deadline_s: float | None = None,
                  network: str = "decode",
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 fault_hook: Callable[[], str | None] | None = None,
+                 spike_factor: float = 1.0,
+                 watchdog: object = None):
         if prefill_per_step < 1:
             raise ValueError("prefill_per_step must be >= 1")
         self.backend = backend
@@ -543,6 +556,9 @@ class ContinuousEngine:
         self.default_deadline_s = default_deadline_s
         self.network = network
         self.clock = clock
+        self.fault_hook = fault_hook
+        self.spike_factor = spike_factor
+        self.watchdog = watchdog
         self.pending: deque[ContinuousRequest] = deque()
         self.active: dict[int, ContinuousRequest] = {}
         self.completed: list[ContinuousRequest] = []
@@ -583,6 +599,9 @@ class ContinuousEngine:
 
     # -- the loop ------------------------------------------------------------
     def step(self) -> StepInfo:
+        # injection point: before any state mutation, so a raising hook
+        # leaves the loop resumable (retry = call step() again)
+        spike = self.fault_hook() if self.fault_hook is not None else None
         self.metrics["steps"] += 1
         finished: list[ContinuousRequest] = []
         prefills = 0
@@ -616,12 +635,18 @@ class ContinuousEngine:
                 self.state.cache, self.prev_tokens,
                 self.state.valid, self.state.lengths)
             dt = self.clock() - t0
+            if spike == "spike":
+                dt *= self.spike_factor
             self.state.cache = cache
             live = self.state.append(result)
             tok = result.tokens()[:, 0]
             decoded = True
             self.metrics["decode_steps"] += 1
             self.metrics["slot_steps"] += occupancy
+            if self.watchdog is not None and self.watchdog.observe(
+                    self.metrics["decode_steps"], dt):
+                if self.monitor is not None:
+                    self.monitor.record_event(self.network, "straggler")
             if self.monitor is not None and self.step_bound_s is not None:
                 self.monitor.check(self.network, dt, self.step_bound_s)
             if self.monitor is not None:

@@ -57,7 +57,8 @@ class BatchedInferenceEngine:
     def __init__(self, graph: Graph, params: dict,
                  hw: HardwareModel = TPU_V5E,
                  num_cores: int | None = None, backend: str = "jax",
-                 deployment=None):
+                 deployment=None,
+                 fault_hook=None):
         self.graph = graph
         self.params = params
         self.backend = backend
@@ -68,6 +69,10 @@ class BatchedInferenceEngine:
         self.deployment = deployment
         self.program = deployment.program
         self._fn = deployment.runner(batched=True, backend=backend)
+        # chaos-run injection point for standalone engines (inside a
+        # Server the resilience layer injects at the job level instead):
+        # called before the runner, so a raising hook costs no state
+        self.fault_hook = fault_hook
         self.metrics = {"batches": 0, "samples": 0}
 
     @classmethod
@@ -86,6 +91,8 @@ class BatchedInferenceEngine:
             (name,) = self.graph.inputs
             batch = {name: batch}
         B = next(iter(batch.values())).shape[0]
+        if self.fault_hook is not None:
+            self.fault_hook()
         res = self._fn(batch)
         self.metrics["batches"] += 1
         self.metrics["samples"] += B

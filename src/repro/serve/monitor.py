@@ -38,6 +38,13 @@ class DeadlineVerdict:
     `response_bound_s` and `deadline_s` are in *modeled machine* seconds
     (the compiler's time base); `latency_s` and `budget_s` are host
     wall-clock seconds — `budget_s = deadline_s * speed_ratio * slack`.
+
+    `outcome` records the terminal disposition of the request the verdict
+    belongs to: "served" (it executed; `met` says whether in budget),
+    "degraded" (resolved without executing — shed network, open circuit
+    breaker, or exhausted retries), or "dropped" (evicted from a bounded
+    queue). Non-"served" outcomes always carry `met=False`: a request the
+    system declined is by definition not a met deadline.
     """
 
     network: str
@@ -46,6 +53,7 @@ class DeadlineVerdict:
     deadline_s: float                # effective deadline (model time)
     budget_s: float                  # wall-clock budget the latency is held to
     met: bool
+    outcome: str = "served"          # "served" | "degraded" | "dropped"
 
     @property
     def missed(self) -> bool:
@@ -73,6 +81,12 @@ class DeadlineMonitor:
         # per-network sustained-occupancy accounting (continuous batching):
         # (sum of occupied slots, observations, slot capacity)
         self._occ: dict[str, list] = {}
+        # per-network resilience event counters (sheds, restores, retries,
+        # breaker transitions, mode switches, stragglers) — one home, so
+        # degraded-mode behavior is first-class telemetry like misses are
+        self.events: dict[str, dict[str, int]] = {}
+        # rolling met/missed window per network for recent_miss_rate()
+        self._met: dict[str, deque] = {}
 
     # -- calibration ---------------------------------------------------------
     @property
@@ -98,7 +112,11 @@ class DeadlineMonitor:
         self.misses.clear()
         self._lat.clear()
         self._hist.clear()
+        # occupancy accumulators reset with everything else: a stale _occ
+        # would blend pre-reset occupancy into post-warmup telemetry
         self._occ.clear()
+        self.events.clear()
+        self._met.clear()
         if recalibrate and not self.pinned:
             self._ratio = None
 
@@ -133,10 +151,28 @@ class DeadlineMonitor:
             self.misses[network] = self.misses.get(network, 0) + 1
         lat = self._lat.setdefault(network, deque(maxlen=self.max_samples))
         lat.append(latency_s)
+        met = self._met.setdefault(network, deque(maxlen=self.max_samples))
+        met.append(v.met)
         bucket = self._bucket(latency_s)
         hist = self._hist.setdefault(network, {})
         hist[bucket] = hist.get(bucket, 0) + 1
         return v
+
+    # -- resilience events ----------------------------------------------------
+    def record_event(self, network: str, kind: str, n: int = 1) -> None:
+        """Count one resilience event for `network` — "shed", "restore",
+        "retry", "breaker_open", "breaker_half_open", "breaker_close",
+        "mode_switch", "straggler", ... Free-form kinds compose: the
+        counters surface in `snapshot()["events"]` next to the deadline
+        accounting, so degraded operation is visible where misses are."""
+        per_net = self.events.setdefault(network, {})
+        per_net[kind] = per_net.get(kind, 0) + n
+
+    def event_count(self, kind: str, network: str | None = None) -> int:
+        """Total count of one event kind (across networks by default)."""
+        if network is not None:
+            return self.events.get(network, {}).get(kind, 0)
+        return sum(per.get(kind, 0) for per in self.events.values())
 
     # -- occupancy (continuous batching) -------------------------------------
     def record_occupancy(self, network: str, occupied: int,
@@ -183,6 +219,18 @@ class DeadlineMonitor:
         checks = self.checks.get(network, 0)
         return self.misses.get(network, 0) / checks if checks else 0.0
 
+    def recent_miss_rate(self, network: str, window: int = 32) -> float:
+        """Miss rate over the last `window` checks of `network` only.
+
+        The cumulative `miss_rate` is sticky — one bad burst dominates it
+        long after conditions recover — so hysteretic policies (overload
+        shedding, breaker recovery) key off this windowed rate instead."""
+        met = self._met.get(network)
+        if not met:
+            return 0.0
+        tail = list(met)[-window:]
+        return sum(1 for m in tail if not m) / len(tail)
+
     def snapshot(self) -> dict:
         """Machine-readable telemetry: calibration + per-network stats."""
         networks = {}
@@ -204,7 +252,8 @@ class DeadlineMonitor:
                 networks[name]["slot_capacity"] = self._occ[name][2]
         return {"speed_ratio": self._ratio,
                 "slack_factor": self.slack_factor,
-                "networks": networks}
+                "networks": networks,
+                "events": {n: dict(per) for n, per in self.events.items()}}
 
     def summary(self) -> str:
         snap = self.snapshot()
@@ -224,4 +273,7 @@ class DeadlineMonitor:
                 f"max={s['max_s'] * 1e3:.3f} ms{occ}")
         if len(lines) == 1:
             lines.append("  (no checks recorded)")
+        for name, per in sorted(snap["events"].items()):
+            pairs = " ".join(f"{k}={v}" for k, v in sorted(per.items()))
+            lines.append(f"  {name:<14} events: {pairs}")
         return "\n".join(lines)

@@ -38,6 +38,31 @@ The pieces, mirroring the paper's deployment story:
     `Deployment` artifacts (PR-4 format) plus the taskset metadata into one
     multi-network bundle, so a whole serving configuration is ahead-of-time
     compilable and redeployable bit-exactly.
+
+The resilience layer on top (docs/serving.md, "Failure modes & degraded
+operation") keeps those guarantees honest when the world misbehaves:
+
+  * **mixed-criticality shedding** — networks carry a criticality level;
+    under overload (flooded queues or a rising windowed miss rate) the
+    server sheds the lowest-criticality network at a hyperperiod boundary
+    — its queue pauses and its requests resolve with a degraded
+    `DeadlineVerdict` instead of a blanket `BackpressureError` — and
+    re-runs the WCET analysis on the remaining set so the surviving
+    verdicts stay sound; shed networks restore hysteretically when load
+    recedes (`OverloadPolicy`);
+  * **atomic mode changes** — `switch_mode(mode)` admission-checks an
+    entire incoming taskset with atomic rollback, then swaps it in ONLY
+    at a hyperperiod boundary while in-flight tickets drain under the old
+    schedule (`repro.serve.modes`);
+  * **fault injection + recovery** — `enable_resilience` arms a seeded
+    `FaultPlan`, bounded retry-with-backoff per job, a per-network
+    `CircuitBreaker` (trip -> degraded mode -> half-open probe), and a
+    `StragglerWatchdog` per network, all counted in `DeadlineMonitor`
+    telemetry (`repro.serve.faults`, sharing `train/fault.py` machinery).
+
+Every submitted ticket reaches a terminal state — "done", "degraded",
+"dropped", or "failed" — so `Ticket.result()` can never hang on a request
+the system gave up on.
 """
 
 from __future__ import annotations
@@ -103,8 +128,17 @@ class Ticket:
     """Handle for one submitted request.
 
     Status: "queued" (waiting for its network's next job slot), "done"
-    (result available), "dropped" (evicted under the drop-oldest policy),
-    "failed" (the serving job raised; `error` holds the message)."""
+    (result available), "dropped" (evicted from a bounded queue or left
+    behind by a mode switch), "degraded" (resolved without executing —
+    shed network, open circuit breaker, or exhausted retry budget),
+    "failed" (the serving job raised; `error` holds the message).
+
+    "done", "dropped" and "degraded" tickets all carry a `TicketResult`
+    (non-"done" ones with `output=None` and a met=False verdict whose
+    `outcome` says why), so `result()` answers for every request the
+    server accepted — a ticket can never hang."""
+
+    TERMINAL = ("done", "dropped", "degraded", "failed")
 
     tid: int
     network: str
@@ -117,6 +151,10 @@ class Ticket:
     @property
     def done(self) -> bool:
         return self.status == "done"
+
+    @property
+    def terminal(self) -> bool:
+        return self.status in self.TERMINAL
 
     def result(self) -> TicketResult:
         if self._result is None:
@@ -177,6 +215,65 @@ class RequestQueue:
         return out
 
 
+# -- overload + resilience policies -------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class OverloadPolicy:
+    """Hysteretic mixed-criticality overload control, evaluated once per
+    hyperperiod boundary (`Server(overload=...)` arms it).
+
+    *Shed* when any active network's queue depth reaches
+    `shed_queue_frac` of its capacity OR its windowed miss rate
+    (`DeadlineMonitor.recent_miss_rate` over `miss_window` checks) exceeds
+    `shed_miss_rate`: the lowest-criticality active network
+    (`TasksetReport.shed_order`) drops out of the hyperperiod program and
+    the WCET analysis re-runs on the survivors. *Restore* the most
+    critical shed network only after `restore_hyperperiods` CONSECUTIVE
+    calm boundaries — every queue at or below `restore_queue_frac` of
+    capacity and no miss-rate pressure — and only if the re-admitted
+    taskset analyzes schedulable. The shed and restore thresholds are
+    deliberately far apart (hysteresis): a system hovering at one
+    threshold must not flap between modes every boundary."""
+
+    shed_queue_frac: float = 0.75
+    shed_miss_rate: float = 0.5
+    miss_window: int = 16
+    restore_queue_frac: float = 0.25
+    restore_hyperperiods: int = 2
+
+    def __post_init__(self):
+        if not 0.0 < self.shed_queue_frac <= 1.0:
+            raise ValueError(f"shed_queue_frac must be in (0, 1], "
+                             f"got {self.shed_queue_frac}")
+        if not 0.0 <= self.restore_queue_frac < self.shed_queue_frac:
+            raise ValueError(
+                f"restore_queue_frac ({self.restore_queue_frac}) must be in "
+                f"[0, shed_queue_frac={self.shed_queue_frac}) — no hysteresis "
+                f"band means mode flapping")
+        if not 0.0 < self.shed_miss_rate <= 1.0:
+            raise ValueError(f"shed_miss_rate must be in (0, 1], "
+                             f"got {self.shed_miss_rate}")
+        if self.restore_hyperperiods < 1:
+            raise ValueError(f"restore_hyperperiods must be >= 1, "
+                             f"got {self.restore_hyperperiods}")
+        if self.miss_window < 1:
+            raise ValueError(f"miss_window must be >= 1, "
+                             f"got {self.miss_window}")
+
+
+@dataclasses.dataclass
+class Resilience:
+    """The armed recovery configuration (`Server.enable_resilience`)."""
+
+    injector: object = None              # faults.FaultInjector (None: no chaos)
+    retry: object = None                 # faults.RetryPolicy
+    breaker_policy: object = None        # faults.BreakerPolicy
+    watchdog_margin: float | None = None  # StragglerWatchdog margin (None: off)
+
+
+_GIVE_UP = object()    # sentinel: the retry budget is spent, tickets degraded
+
+
 # -- the server ---------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -195,6 +292,10 @@ class _Network:
     cengine: object = None               # ContinuousEngine (decode networks)
     sustained: object = None             # SustainedServeVerdict (if declared)
     inflight: dict = dataclasses.field(default_factory=dict)  # rid -> Ticket
+    shed: bool = False                   # paused by overload control
+    breaker: object = None               # faults.CircuitBreaker (resilience)
+    watchdog: object = None              # StragglerWatchdog (resilience)
+    jobs_done: int = 0                   # executed jobs (watchdog step index)
 
 
 def _as_graph(net, name: str, *, batch: int, cache_len: int,
@@ -224,14 +325,17 @@ class Server:
                      "drop-oldest");
       speed_ratio    pin the host-vs-model speed ratio (None: calibrate on
                      the first real execution);
-      slack_factor   wall-clock budget slack over the scaled bound.
+      slack_factor   wall-clock budget slack over the scaled bound;
+      overload       an `OverloadPolicy` to arm hysteretic
+                     mixed-criticality shedding (None: never shed).
     """
 
     def __init__(self, machine: HardwareModel, *, backend: str = "jax",
                  num_cores: int | None = None, arbitration: str = "static",
                  queue_capacity: int = 64, queue_policy: str = "reject",
                  speed_ratio: float | None = None,
-                 slack_factor: float = 1.5):
+                 slack_factor: float = 1.5,
+                 overload: OverloadPolicy | None = None):
         from ..compiler import get_backend
         get_backend(backend)                 # fail fast on unknown backend
         self.machine = machine
@@ -240,14 +344,22 @@ class Server:
         self.arbitration = arbitration
         self.queue_capacity = queue_capacity
         self.queue_policy = queue_policy
+        self.overload = overload
+        self.resilience: Resilience | None = None
         self.monitor = DeadlineMonitor(speed_ratio=speed_ratio,
                                        slack_factor=slack_factor)
-        self.metrics = {"jobs": 0, "idle_jobs": 0, "tickets": 0}
+        self.metrics = {"jobs": 0, "idle_jobs": 0, "tickets": 0,
+                        "dropped": 0, "degraded": 0, "retries": 0,
+                        "sheds": 0, "restores": 0, "mode_switches": 0}
         self._nets: dict[str, _Network] = {}
         self.report: TasksetReport | None = None
         self.compiled = None                 # CompiledTaskset after analyze()
         self._cursor = 0                     # next job in the hyperperiod
         self.hyperperiods_completed = 0
+        self.clock_base_s = 0.0              # abs time across schedule changes
+        self.mode_name: str | None = None    # current Mode (switch_mode)
+        self._staged_mode = None             # modes.StagedMode awaiting boundary
+        self._calm = 0                       # consecutive calm boundaries
         self._tids = itertools.count()
 
     # -- registration --------------------------------------------------------
@@ -256,8 +368,18 @@ class Server:
         return [st.spec for st in self._nets.values()]
 
     @property
+    def active_specs(self) -> list[NetworkSpec]:
+        """Specs currently in the hyperperiod program (shed ones excluded)."""
+        return [st.spec for st in self._nets.values() if not st.shed]
+
+    @property
     def networks(self) -> list[str]:
         return list(self._nets)
+
+    @property
+    def shed_networks(self) -> list[str]:
+        """Networks currently shed by overload control (queues paused)."""
+        return [n for n, st in self._nets.items() if st.shed]
 
     @property
     def executors(self) -> dict[str, object]:
@@ -269,6 +391,7 @@ class Server:
 
     def add(self, name: str, net, period_s: float,
             deadline_s: float | None = None, *,
+            criticality: int = 0,
             step_fn: Callable | None = None, slots: int = 1,
             autorun: bool = False, params: dict | None = None,
             batch: int = 1, cache_len: int = 256,
@@ -289,9 +412,12 @@ class Server:
         graph = _as_graph(net, name, batch=batch, cache_len=cache_len,
                           max_layers=max_layers)
         self._nets[name] = _Network(
-            spec=NetworkSpec(name, graph, period_s, deadline_s),
+            spec=NetworkSpec(name, graph, period_s, deadline_s,
+                             criticality=criticality),
             slots=slots, step_fn=step_fn, autorun=autorun, params=params,
             queue=RequestQueue(name, self.queue_capacity, self.queue_policy))
+        if self.resilience is not None:
+            self._arm_networks()
         self._invalidate()
 
     def _invalidate(self) -> None:
@@ -300,19 +426,25 @@ class Server:
         self.compiled = None
         self._cursor = 0
         self.hyperperiods_completed = 0
+        self.clock_base_s = 0.0
 
     def analyze(self) -> TasksetReport:
-        """(Re)run the hyperperiod analysis over the registered taskset."""
+        """(Re)run the hyperperiod analysis over the ACTIVE taskset (shed
+        networks stay out of the program until restored)."""
         if not self._nets:
             raise AdmissionError("no networks registered")
+        specs = self.active_specs
+        if not specs:
+            raise AdmissionError("every registered network is shed")
         self.report, self.compiled = analyze_taskset(
-            self.specs, self.machine, self.num_cores,
+            specs, self.machine, self.num_cores,
             arbitration=self.arbitration)
         self._cursor = 0
         return self.report
 
     def register(self, name: str, net, period_s: float,
                  deadline_s: float | None = None, *,
+                 criticality: int = 0,
                  step_fn: Callable | None = None, slots: int = 1,
                  params: dict | None = None, batch: int = 1,
                  cache_len: int = 256,
@@ -330,11 +462,16 @@ class Server:
         Networks whose op kinds have no compiled lowering (LM decode
         graphs) are admitted for analysis and served through `step_fn`
         (one request per job: ``step_fn(payload) -> output``).
+
+        `criticality` orders overload shedding: higher levels shed later
+        (see `OverloadPolicy`).
         """
         snapshot = (dict(self._nets), self.report, self.compiled,
-                    self._cursor, self.hyperperiods_completed)
+                    self._cursor, self.hyperperiods_completed,
+                    self.clock_base_s)
         try:
-            self.add(name, net, period_s, deadline_s, step_fn=step_fn,
+            self.add(name, net, period_s, deadline_s,
+                     criticality=criticality, step_fn=step_fn,
                      slots=slots, params=params, batch=batch,
                      cache_len=cache_len, max_layers=max_layers)
             report = self.analyze()
@@ -345,12 +482,14 @@ class Server:
             self._build_executor(name)
         except Exception:
             (self._nets, self.report, self.compiled,
-             self._cursor, self.hyperperiods_completed) = snapshot
+             self._cursor, self.hyperperiods_completed,
+             self.clock_base_s) = snapshot
             raise
         return report.verdict_of(name)
 
     def register_decode(self, name: str, cfg: ModelConfig, period_s: float,
                         deadline_s: float | None = None, *, params,
+                        criticality: int = 0,
                         slots: int = 4, prompt_len: int = 16,
                         max_new_tokens: int = 32, max_len: int = 256,
                         arrival_rps: float | None = None,
@@ -384,9 +523,11 @@ class Server:
         from .continuous import ContinuousEngine, LMBackend
         from ..core.wcet import sustained_occupancy
         snapshot = (dict(self._nets), self.report, self.compiled,
-                    self._cursor, self.hyperperiods_completed)
+                    self._cursor, self.hyperperiods_completed,
+                    self.clock_base_s)
         try:
-            self.add(name, cfg, period_s, deadline_s, slots=slots,
+            self.add(name, cfg, period_s, deadline_s,
+                     criticality=criticality, slots=slots,
                      params=params, batch=slots, cache_len=max_len,
                      max_layers=max_layers)
             report = self.analyze()
@@ -413,9 +554,12 @@ class Server:
                 prefill_per_step=prefill_per_step, monitor=self.monitor,
                 step_bound_s=bound, default_deadline_s=st.spec.deadline,
                 network=name)
+            if self.resilience is not None:
+                self._arm_networks()
         except Exception:
             (self._nets, self.report, self.compiled,
-             self._cursor, self.hyperperiods_completed) = snapshot
+             self._cursor, self.hyperperiods_completed,
+             self.clock_base_s) = snapshot
             raise
         return report.verdict_of(name)
 
@@ -456,8 +600,13 @@ class Server:
         overrides the network deadline for THIS request's verdict; the
         schedule-level enforcement vs the WCET bound is unaffected.
         Raises `BackpressureError` when the bounded queue is full under
-        the reject policy; under drop-oldest the stalest ticket is marked
-        "dropped" instead."""
+        the reject policy; under drop-oldest the stalest ticket resolves
+        terminally ("dropped", with a met=False verdict) instead.
+
+        A shed network (overload control) or one whose circuit breaker is
+        open accepts the request but resolves it immediately with a
+        degraded verdict — degraded operation is a per-network property,
+        not a blanket `BackpressureError` for everyone."""
         st = self._net(name)
         if st.autorun:
             raise ServeError(
@@ -471,7 +620,13 @@ class Server:
                 f"Server.register, pass step_fn=, or call attach()")
         t = Ticket(tid=next(self._tids), network=name, payload=payload,
                    deadline_s=deadline_s)
-        st.queue.push(t)
+        if st.shed or (st.breaker is not None
+                       and st.breaker.state == "open"):
+            self._resolve_terminal(t, "degraded")
+            return t
+        evicted = st.queue.push(t)
+        if evicted is not None:
+            self._resolve_terminal(evicted, "dropped")
         return t
 
     def queue_depths(self) -> dict[str, int]:
@@ -481,12 +636,19 @@ class Server:
     def step(self) -> Job:
         """Execute the next job of the hyperperiod program (release order),
         serving that network's queued tickets in its static batch slots.
-        Advances across hyperperiod boundaries; returns the executed Job."""
+        Advances across hyperperiod boundaries; returns the executed Job.
+
+        At each hyperperiod boundary (before the first job), boundary
+        housekeeping runs: a staged mode switch applies and the overload
+        control loop sheds/restores — both are forbidden mid-hyperperiod
+        because they change the schedule the in-flight bounds assume."""
         if self.report is None:
             self.analyze()
+        if self._cursor == 0:
+            self._boundary()
         jobs = self.compiled.jobs
         job = jobs[self._cursor]
-        release_abs = (self.hyperperiods_completed
+        release_abs = (self.clock_base_s + self.hyperperiods_completed
                        * self.compiled.hyperperiod_s + job.release)
         self._execute_job(job, release_abs)
         self._cursor += 1
@@ -495,24 +657,58 @@ class Server:
             self.hyperperiods_completed += 1
         return job
 
+    def _boundary(self) -> None:
+        """Hyperperiod-boundary housekeeping (the only place the active
+        schedule may change): apply a staged mode, then shed/restore."""
+        if self._staged_mode is not None:
+            self._apply_mode()
+        if self.overload is not None:
+            self._overload_control()
+
+    def _now_s(self) -> float:
+        """Absolute model time at the current boundary: completed
+        hyperperiods of the current program plus the base carried across
+        schedule changes (sheds, restores, mode switches)."""
+        if self.compiled is None:
+            return self.clock_base_s
+        return (self.clock_base_s + self.hyperperiods_completed
+                * self.compiled.hyperperiod_s)
+
     def _execute_job(self, job: Job, release_abs: float) -> None:
         st = self._nets[job.network]
         bound = self.report.bound(job.network)
         self.metrics["jobs"] += 1
+        if st.breaker is not None and not st.autorun:
+            action = st.breaker.on_release()
+            if action == "skip":
+                # open breaker: the network operates degraded — this
+                # job's worth of queued tickets resolves now rather than
+                # waiting behind a broken executor ("probe" falls through
+                # so the half-open breaker has a real job to judge)
+                k = 1 if (st.runner is None and st.cengine is None) \
+                    else st.slots
+                for t in st.queue.pop_upto(k):
+                    self._resolve_terminal(t, "degraded")
+                self.metrics["idle_jobs"] += 1
+                return
         if st.autorun and st.step_fn is not None:
             # MultiModelEngine mode: every job free-runs its no-arg fn
             # (autorun networks never hold tickets — submit refuses them)
-            t0 = time.perf_counter()
-            st.step_fn()
-            dt = time.perf_counter() - t0
+            out, dt = self._serve_call(st, [], st.step_fn)
+            if out is _GIVE_UP:
+                return
             self.monitor.check(job.network, dt, bound)
         elif st.runner is not None and len(st.queue) > 0:
             tickets = st.queue.pop_upto(st.slots)
             with self._failing(tickets):
+                # malformed payloads are caller errors, not executor
+                # faults: they fail the tickets and raise without
+                # consuming the retry budget
                 batch = self._stack(st, [t.payload for t in tickets])
-                t0 = time.perf_counter()
-                out = st.runner(batch)
-                dt = time.perf_counter() - t0
+            out, dt = self._serve_call(st, tickets,
+                                       lambda: st.runner(batch))
+            if out is _GIVE_UP:
+                return
             self.monitor.check(job.network, dt, bound)
             for i, t in enumerate(tickets):
                 self._finish(t, {k: v[i] for k, v in out.items()},
@@ -522,10 +718,10 @@ class Server:
         elif st.step_fn is not None and len(st.queue) > 0:
             tickets = st.queue.pop_upto(1)
             (t,) = tickets
-            with self._failing(tickets):
-                t0 = time.perf_counter()
-                out = st.step_fn(t.payload)
-                dt = time.perf_counter() - t0
+            out, dt = self._serve_call(st, tickets,
+                                       lambda: st.step_fn(t.payload))
+            if out is _GIVE_UP:
+                return
             self.monitor.check(job.network, dt, bound)
             self._finish(t, out, dt, bound, release_abs)
         else:
@@ -553,9 +749,18 @@ class Server:
         if not ce.has_work:
             self.metrics["idle_jobs"] += 1
             return
-        info = ce.step()
+        # a failed decode step keeps its in-flight tickets queued in the
+        # engine for the NEXT job (the stream is resumable), so no tickets
+        # degrade here — the breaker/retry accounting still applies
+        info, _ = self._serve_call(st, [], ce.step)
+        if info is _GIVE_UP:
+            return
         for req in info.finished:
-            t = st.inflight.pop(req.rid)
+            # pop defensively: a shed or mode switch may have resolved
+            # the ticket degraded while its stream was still in flight
+            t = st.inflight.pop(req.rid, None)
+            if t is None:
+                continue
             t._result = TicketResult(
                 output=list(req.out), latency_s=req.latency_s,
                 response_bound_s=bound * req.steps_held,
@@ -606,13 +811,324 @@ class Server:
         t.status = "done"
         self.metrics["tickets"] += 1
 
+    # -- resilience: faults, retries, breakers -------------------------------
+    def enable_resilience(self, *, faults=None, retry=None, breaker=None,
+                          watchdog_margin: float | None = None,
+                          overload: OverloadPolicy | None = None) -> None:
+        """Arm the recovery layer (see `repro.serve.faults`):
+
+          faults           a `FaultPlan` — seeded injection of failures /
+                           timeouts / latency spikes into executor calls
+                           (None: no chaos, recovery machinery only);
+          retry            a `RetryPolicy` — bounded retry-with-backoff
+                           per serving job (default: 2 retries, no wait);
+          breaker          a `BreakerPolicy` — per-network circuit
+                           breaking: N consecutive failed jobs trip the
+                           network into degraded mode, a half-open probe
+                           job decides recovery;
+          watchdog_margin  arm a per-network `StragglerWatchdog` flagging
+                           jobs slower than margin x rolling median
+                           (counted as "straggler" events; None: off);
+          overload         convenience: also arm/replace the
+                           `OverloadPolicy` (same as the constructor
+                           knob).
+
+        With resilience armed, an executor failure no longer fails its
+        tickets and propagates: the job retries within its budget, then
+        its tickets resolve degraded and the breaker counts the failure.
+        Caller errors (malformed payloads) still raise."""
+        from .faults import BreakerPolicy, RetryPolicy
+        self.resilience = Resilience(
+            injector=faults.injector() if faults is not None else None,
+            retry=retry or RetryPolicy(),
+            breaker_policy=breaker or BreakerPolicy(),
+            watchdog_margin=watchdog_margin)
+        if overload is not None:
+            self.overload = overload
+        self._arm_networks()
+
+    def _arm_networks(self) -> None:
+        """(Re)build per-network breakers/watchdogs for the current set
+        (idempotent; also run when networks are added or a mode applies)."""
+        from .faults import CircuitBreaker, StragglerWatchdog
+        res = self.resilience
+        for name, st in self._nets.items():
+            if st.breaker is None:
+                st.breaker = CircuitBreaker(name, res.breaker_policy,
+                                            monitor=self.monitor)
+            if res.watchdog_margin is not None and st.watchdog is None:
+                st.watchdog = StragglerWatchdog(margin=res.watchdog_margin)
+
+    def _serve_call(self, st: _Network, tickets: list[Ticket],
+                    thunk: Callable):
+        """One executor call for a job. Returns (output, dt_s).
+
+        Without resilience this is the legacy contract: a raising
+        executor marks the popped tickets "failed" and the exception
+        propagates to the `step()`/`run()` caller. With resilience armed
+        the call goes through `_call_resilient` (injection, retries,
+        breaker, watchdog) and a job that exhausts its retry budget
+        resolves its tickets degraded and returns `(_GIVE_UP, 0.0)`
+        instead of raising — serving continues."""
+        if self.resilience is None:
+            with self._failing(tickets):
+                t0 = time.perf_counter()
+                out = thunk()
+                return out, time.perf_counter() - t0
+        out, dt, error = self._call_resilient(st, thunk)
+        if error is None:
+            return out, dt
+        for t in tickets:
+            self._resolve_terminal(t, "degraded", error=error)
+        return _GIVE_UP, 0.0
+
+    def _call_resilient(self, st: _Network, thunk: Callable):
+        """Run `thunk` under the armed resilience: one seeded fault draw
+        per attempt (raising faults raise BEFORE the real call, so state
+        is untouched and the retry is clean), bounded retry-with-backoff,
+        breaker and watchdog outcome recording. Returns
+        `(out, dt_s, None)` on success — dt inflated by the spike factor
+        when a latency spike was drawn — or `(None, 0.0, error)` once the
+        budget is spent (ONE breaker failure per job: the breaker counts
+        consecutive failed *jobs*, not attempts)."""
+        res = self.resilience
+        name = st.spec.name
+        error = None
+        for attempt in range(1 + res.retry.max_retries):
+            if attempt:
+                self.metrics["retries"] += 1
+                self.monitor.record_event(name, "retry")
+                backoff = res.retry.backoff(attempt)
+                if backoff > 0:
+                    time.sleep(backoff)
+            try:
+                spike = (res.injector.before_call(name)
+                         if res.injector is not None else None)
+                t0 = time.perf_counter()
+                out = thunk()
+                dt = time.perf_counter() - t0
+            except Exception as e:
+                error = f"{type(e).__name__}: {e}"
+                continue
+            if spike == "spike":
+                dt *= res.injector.plan.spike_factor
+            if st.breaker is not None:
+                st.breaker.record_success()
+            st.jobs_done += 1
+            if st.watchdog is not None and st.watchdog.observe(
+                    st.jobs_done, dt):
+                self.monitor.record_event(name, "straggler")
+            return out, dt, None
+        if st.breaker is not None:
+            st.breaker.record_failure()
+        self.monitor.record_event(name, "job_failed")
+        return None, 0.0, error
+
+    def _resolve_terminal(self, t: Ticket, outcome: str,
+                          error: str | None = None) -> None:
+        """Resolve a ticket the system gave up on ("dropped"/"degraded")
+        with a terminal result — output=None and a met=False verdict
+        carrying the outcome — so `Ticket.result()` answers for every
+        accepted request instead of hanging forever."""
+        spec = self._nets[t.network].spec
+        try:
+            bound = (self.report.bound(t.network)
+                     if self.report is not None else spec.deadline)
+        except KeyError:                 # shed nets are not in the report
+            bound = spec.deadline
+        deadline = t.deadline_s if t.deadline_s is not None \
+            else spec.deadline
+        verdict = DeadlineVerdict(
+            network=t.network, latency_s=0.0, response_bound_s=bound,
+            deadline_s=deadline, budget_s=0.0, met=False, outcome=outcome)
+        t._result = TicketResult(output=None, latency_s=0.0,
+                                 response_bound_s=bound, verdict=verdict,
+                                 release_s=self._now_s())
+        t.status = outcome
+        t.error = error
+        self.metrics[outcome] += 1
+        self.monitor.record_event(t.network, outcome)
+
+    # -- resilience: mixed-criticality overload control ----------------------
+    def shed(self, name: str) -> None:
+        """Shed `name` into degraded mode: its queued and in-flight
+        tickets resolve degraded, its queue pauses (submissions resolve
+        degraded immediately), its jobs leave the hyperperiod program,
+        and the WCET analysis re-runs on the remaining active set so the
+        survivors' response bounds stay sound. Refuses to shed the last
+        active network."""
+        st = self._net(name)
+        if st.shed:
+            return
+        if len(self.active_specs) <= 1:
+            raise ServeError(f"cannot shed {name!r}: it is the only "
+                             f"active network")
+        self.metrics["sheds"] += 1
+        self.monitor.record_event(name, "shed")
+        for t in st.queue.pop_upto(len(st.queue)):
+            self._resolve_terminal(t, "degraded")
+        for t in list(st.inflight.values()):
+            self._resolve_terminal(t, "degraded")
+        st.inflight.clear()
+        st.shed = True
+        self._reanalyze_active()
+
+    def restore(self, name: str | None = None) -> str | None:
+        """Re-admit a shed network (the most critical one by default) —
+        but only if the restored taskset re-analyzes schedulable, which
+        keeps a restore from immediately re-triggering the overload it
+        was shed for. Returns the restored name, or None."""
+        shed = self.shed_networks
+        if not shed:
+            return None
+        if name is not None:
+            if not self._net(name).shed:
+                raise ServeError(f"network {name!r} is not shed")
+            candidates = [name]
+        else:
+            candidates = sorted(
+                shed, key=lambda n: (-self._nets[n].spec.criticality, n))
+        for cand in candidates:
+            st = self._nets[cand]
+            trial = self.active_specs + [st.spec]
+            report, _ = analyze_taskset(trial, self.machine,
+                                        self.num_cores,
+                                        arbitration=self.arbitration)
+            if not report.schedulable:
+                continue
+            st.shed = False
+            self.metrics["restores"] += 1
+            self.monitor.record_event(cand, "restore")
+            self._reanalyze_active()
+            return cand
+        return None
+
+    def _reanalyze_active(self) -> None:
+        """Re-run the analysis over the active set after a shed/restore,
+        carrying the absolute clock forward so `release_s` timestamps
+        stay monotonic across the schedule change."""
+        if self.compiled is not None:
+            self.clock_base_s += (self.hyperperiods_completed
+                                  * self.compiled.hyperperiod_s)
+        self.hyperperiods_completed = 0
+        self.report, self.compiled = analyze_taskset(
+            self.active_specs, self.machine, self.num_cores,
+            arbitration=self.arbitration)
+        self._cursor = 0
+
+    def _overload_control(self) -> None:
+        """The per-boundary shed/restore decision (see `OverloadPolicy`)."""
+        if self._overloaded():
+            self._calm = 0
+            order = [n for n in self.report.shed_order()
+                     if not self._nets[n].shed]
+            if len(order) > 1:           # never shed the last network
+                self.shed(order[0])
+        elif self.shed_networks and self._calm_now():
+            self._calm += 1
+            if self._calm >= self.overload.restore_hyperperiods:
+                if self.restore() is not None:
+                    self._calm = 0
+        else:
+            self._calm = 0
+
+    def _overloaded(self) -> bool:
+        pol = self.overload
+        for n, st in self._nets.items():
+            if st.shed:
+                continue
+            if len(st.queue) >= pol.shed_queue_frac * st.queue.capacity:
+                return True
+            if self.monitor.recent_miss_rate(
+                    n, pol.miss_window) > pol.shed_miss_rate:
+                return True
+        return False
+
+    def _calm_now(self) -> bool:
+        """Calm = every active queue at/below the restore threshold and
+        no miss-rate pressure (the low side of the hysteresis band)."""
+        pol = self.overload
+        for n, st in self._nets.items():
+            if st.shed:
+                continue
+            if len(st.queue) > pol.restore_queue_frac * st.queue.capacity:
+                return False
+            if self.monitor.recent_miss_rate(
+                    n, pol.miss_window) > pol.shed_miss_rate:
+                return False
+        return True
+
+    # -- resilience: atomic mode changes -------------------------------------
+    def switch_mode(self, mode) -> "TasksetReport":
+        """Atomically switch the whole admitted taskset to `mode` (a
+        `repro.serve.modes.Mode`), at a hyperperiod boundary ONLY.
+
+        The incoming taskset is admission-checked and compiled NOW
+        (`modes.prepare_mode`) — an unschedulable or uncompilable mode
+        raises and the current taskset keeps serving untouched (the same
+        atomic contract as `register`). The prepared mode is then staged:
+        the remaining jobs of the current hyperperiod drain their queued
+        tickets under the old schedule, and exactly at the boundary the
+        server swaps — queues of networks present in both modes carry
+        over, tickets of departing networks resolve terminally
+        ("dropped"), and the timeline continues on the new hyperperiod
+        program with the absolute clock carried forward. Returns the new
+        mode's (schedulable) `TasksetReport`.
+
+        Decode networks (`register_decode`) cannot ride through a switch;
+        re-register them afterwards (the `Server.load` rule)."""
+        from .modes import prepare_mode
+        staged = prepare_mode(self, mode)
+        self._staged_mode = staged
+        # idle server or one already sitting at a boundary: apply now
+        # (step() applies staged modes only at cursor 0 otherwise)
+        if self.compiled is None or not self._nets or self._cursor == 0:
+            self._apply_mode()
+        return staged.report
+
+    def _apply_mode(self) -> None:
+        """Swap in the staged mode (hyperperiod boundary only)."""
+        staged = self._staged_mode
+        self._staged_mode = None
+        new = staged.nets
+        for name, st in self._nets.items():
+            if name in new:
+                # persisting network: its queued requests survive the
+                # switch and serve under the NEW mode's bounds
+                new[name].queue = st.queue
+            else:
+                for t in st.queue.pop_upto(len(st.queue)):
+                    self._resolve_terminal(t, "dropped")
+                for t in list(st.inflight.values()):
+                    self._resolve_terminal(t, "dropped")
+                st.inflight.clear()
+        if self.compiled is not None:
+            self.clock_base_s += (self.hyperperiods_completed
+                                  * self.compiled.hyperperiod_s)
+        self._nets = new
+        self.report = staged.report
+        self.compiled = staged.compiled
+        self._cursor = 0
+        self.hyperperiods_completed = 0
+        self._calm = 0
+        self.mode_name = staged.mode.name
+        self.metrics["mode_switches"] += 1
+        self.monitor.record_event(staged.mode.name, "mode_switch")
+        if self.resilience is not None:
+            self._arm_networks()
+
     def run(self, hyperperiods: int | None = None,
             duration_s: float | None = None, *,
             restart: bool = False) -> dict:
         """Serve `hyperperiods` whole hyperperiods of jobs (or enough to
         cover `duration_s` of modeled time; default 1), continuing from the
         current job cursor — back-to-back calls give sustained operation.
-        Returns the telemetry snapshot (see `telemetry()`)."""
+        Returns the telemetry snapshot (see `telemetry()`).
+
+        Counts *boundary crossings* rather than a precomputed number of
+        jobs: a mid-run mode switch or overload shed changes the job
+        count per hyperperiod, and the run still serves the requested
+        number of whole hyperperiods of whatever schedule is active."""
         if self.report is None:
             self.analyze()
         if restart:
@@ -622,8 +1138,11 @@ class Server:
                 raise ValueError("pass hyperperiods= or duration_s=, not both")
             hyperperiods = max(1, math.ceil(
                 duration_s / self.compiled.hyperperiod_s))
-        for _ in range((hyperperiods or 1) * len(self.compiled.jobs)):
+        crossed = 0
+        while crossed < (hyperperiods or 1):
             self.step()
+            if self._cursor == 0:
+                crossed += 1
         return self.telemetry()
 
     # -- telemetry -----------------------------------------------------------
@@ -634,6 +1153,11 @@ class Server:
                 "queue_depths": self.queue_depths(),
                 "dropped": {n: st.queue.dropped
                             for n, st in self._nets.items()},
+                "shed": self.shed_networks,
+                "mode": self.mode_name,
+                "breakers": {n: st.breaker.state
+                             for n, st in self._nets.items()
+                             if st.breaker is not None},
                 "hyperperiods_completed": self.hyperperiods_completed}
         continuous = {n: {**st.cengine.metrics,
                           "occupancy": st.cengine.state.occupancy,
@@ -666,6 +1190,15 @@ class Server:
                      f"tickets={self.metrics['tickets']}, "
                      f"queued={self.queue_depths()}, "
                      f"hyperperiods={self.hyperperiods_completed}")
+        m = self.metrics
+        if any(m[k] for k in ("dropped", "degraded", "retries", "sheds",
+                              "restores", "mode_switches")) or self.mode_name:
+            lines.append(
+                f"  mode={self.mode_name or '-'} shed={self.shed_networks} "
+                f"dropped={m['dropped']} degraded={m['degraded']} "
+                f"retries={m['retries']} sheds={m['sheds']} "
+                f"restores={m['restores']} "
+                f"mode_switches={m['mode_switches']}")
         return "\n".join(lines)
 
     # -- MultiModelEngine-compat executor attachment -------------------------
@@ -733,6 +1266,7 @@ class Server:
                        "slack_factor": self.monitor.slack_factor},
             "networks": [{"name": n, "period_s": st.spec.period_s,
                           "deadline_s": st.spec.deadline_s,
+                          "criticality": st.spec.criticality,
                           "slots": st.slots,
                           "executable": n in deployments,
                           "step_fn": st.step_fn is not None,
@@ -787,6 +1321,7 @@ class Server:
             if net.get("executable"):
                 dep = deployments[name]
                 srv.add(name, dep.graph, net["period_s"], net["deadline_s"],
+                        criticality=net.get("criticality", 0),
                         slots=net.get("slots", 1))
                 st = srv._nets[name]
                 st.deployment = dep
@@ -798,6 +1333,7 @@ class Server:
                         f"{dirpath}: bundle lists network {name!r} but "
                         f"carries neither its artifact nor its graph")
                 srv.add(name, graph, net["period_s"], net["deadline_s"],
+                        criticality=net.get("criticality", 0),
                         slots=net.get("slots", 1),
                         step_fn=step_fns.get(name))
         srv.analyze()

@@ -1,0 +1,511 @@
+"""Robustness layer (ISSUE 7): mixed-criticality overload shedding,
+atomic hyperperiod-boundary mode changes, and fault injection + recovery.
+
+The contract under test:
+
+  * every accepted ticket reaches a TERMINAL state — done, degraded,
+    dropped, or failed — and `Ticket.result()` answers for all but
+    "failed" (which raises with the error). Nothing ever hangs.
+  * overload sheds the lowest-criticality network first, re-runs the
+    WCET analysis on the survivors, and restores hysteretically;
+  * `switch_mode` admission-checks the incoming taskset atomically and
+    swaps ONLY at a hyperperiod boundary (in-flight tickets drain under
+    the old schedule, departing tickets resolve "dropped");
+  * injected faults (seeded, reproducible) are absorbed by bounded
+    retries and per-network circuit breaking — high-criticality
+    networks stay clean through a chaos run (`chaos` marker: the CI
+    fault-injection step runs exactly these with the fixed seeds).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import cnn
+from repro.hw import scaled_paper_machine
+from repro.models import init_params
+from repro.models.config import ModelConfig
+from repro.serve import (AdmissionError, BreakerPolicy, CircuitBreaker,
+                         DeadlineMonitor, FaultPlan, InjectedFailure,
+                         Mode, ModeChangeError, ModeNetwork, OverloadPolicy,
+                         RetryPolicy, ServeError, Server)
+from repro.serve.continuous import (ContinuousEngine, ToyBackend,
+                                    toy_reference)
+
+HW = scaled_paper_machine(4)
+
+
+def _frame(seed=0, h=32, w=32):
+    return np.random.default_rng(seed).integers(
+        -64, 64, (h, w, 3)).astype(np.int8)
+
+
+def _lm_cfg(layers=2):
+    # swiglu gates emit "mul" ops (no compiled lowering) -> analysis-only
+    return ModelConfig(name="tiny_lm", family="dense", num_layers=layers,
+                       d_model=128, num_heads=4, num_kv_heads=4, d_ff=256,
+                       vocab_size=512, act="swiglu")
+
+
+class _Flaky:
+    """step_fn that fails its first `fails` calls, then heals."""
+
+    def __init__(self, fails):
+        self.calls = 0
+        self.fails = fails
+
+    def __call__(self, tok):
+        self.calls += 1
+        if self.calls <= self.fails:
+            raise RuntimeError("transient executor fault")
+        return np.int64(tok) + 1
+
+
+def _single_lm(step_fn, **kw):
+    srv = Server(HW, backend="numpy", num_cores=4, speed_ratio=1e9, **kw)
+    srv.register("lm", _lm_cfg(), period_s=1 / 10, cache_len=64,
+                 step_fn=step_fn)
+    return srv
+
+
+def _two_tier(queue_capacity=4, **kw):
+    """High-criticality executable CNN + low-criticality step_fn LM."""
+    srv = Server(HW, backend="numpy", num_cores=4, speed_ratio=1e9,
+                 queue_capacity=queue_capacity, **kw)
+    srv.register("hi", cnn.small_cnn(), period_s=1 / 50, slots=2,
+                 criticality=2)
+    srv.register("lo", _lm_cfg(), period_s=1 / 25, cache_len=64,
+                 criticality=0, step_fn=lambda tok: np.int64(tok) * 2)
+    return srv
+
+
+# -- fault plan / injector ----------------------------------------------------
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="sum"):
+        FaultPlan(fail_rate=0.6, timeout_rate=0.5)
+    with pytest.raises(ValueError, match="fail_rate"):
+        FaultPlan(fail_rate=-0.1)
+    with pytest.raises(ValueError, match="spike_factor"):
+        FaultPlan(spike_rate=0.1, spike_factor=0.5)
+    with pytest.raises(ValueError, match="max_retries"):
+        RetryPolicy(max_retries=-1)
+    with pytest.raises(ValueError, match="threshold"):
+        BreakerPolicy(threshold=0)
+    assert RetryPolicy(backoff_s=0.1, backoff_factor=2.0).backoff(3) == \
+        pytest.approx(0.4)
+
+
+@pytest.mark.chaos
+def test_fault_injection_is_seeded_and_exclusion_free():
+    plan = FaultPlan(seed=3, fail_rate=0.4, timeout_rate=0.2,
+                     spike_rate=0.2, networks=("a",))
+    i1, i2 = plan.injector(), plan.injector()
+    seq1 = []
+    for _ in range(40):
+        assert i1.draw("b") is None     # excluded: never faults...
+        seq1.append(i1.draw("a"))
+    seq2 = [i2.draw("a") for _ in range(40)]
+    assert seq1 == seq2                 # ...and consumes NO draw
+    assert set(seq1) > {None}           # the plan actually fires
+    assert i1.injected["fail"] == sum(s == "fail" for s in seq1)
+    assert i1.injected["timeout"] == sum(s == "timeout" for s in seq1)
+
+
+def test_circuit_breaker_state_machine():
+    m = DeadlineMonitor()
+    b = CircuitBreaker("n", BreakerPolicy(threshold=2, cooldown_jobs=2),
+                       monitor=m)
+    assert b.on_release() == "run" and not b.degraded
+    b.record_failure()
+    assert b.state == "closed"          # one failure is not a trip
+    b.record_failure()
+    assert b.state == "open" and b.degraded
+    assert b.on_release() == "skip"     # cooldown release 1
+    assert b.on_release() == "probe"    # cooldown release 2 -> half-open
+    b.record_failure()                  # failed probe: back to open
+    assert b.state == "open"
+    assert b.on_release() == "skip"
+    assert b.on_release() == "probe"
+    b.record_success()                  # successful probe closes
+    assert b.state == "closed" and not b.degraded
+    assert m.event_count("breaker_open", "n") == 2
+    assert m.event_count("breaker_half_open", "n") == 2
+    assert m.event_count("breaker_close", "n") == 1
+    b.record_failure()
+    b.record_success()
+    b.record_failure()
+    assert b.state == "closed"          # success resets the streak
+
+
+# -- retry + breaker on the server -------------------------------------------
+
+def test_bounded_retry_recovers_transient_fault():
+    flaky = _Flaky(1)
+    srv = _single_lm(flaky)
+    srv.enable_resilience(retry=RetryPolicy(max_retries=2))
+    t = srv.submit("lm", 4)
+    srv.run(hyperperiods=1)
+    assert t.done and t.result().output == 5
+    assert flaky.calls == 2
+    assert srv.metrics["retries"] == 1
+    assert srv.telemetry()["events"]["lm"]["retry"] == 1
+
+
+def test_exhausted_retries_degrade_instead_of_crashing():
+    flaky = _Flaky(10 ** 6)
+    srv = _single_lm(flaky)
+    srv.enable_resilience(retry=RetryPolicy(max_retries=1))
+    t = srv.submit("lm", 4)
+    srv.run(hyperperiods=1)             # must NOT raise
+    assert t.status == "degraded" and t.terminal
+    assert "transient executor fault" in t.error
+    r = t.result()                      # terminal: result() answers
+    assert r.output is None and r.verdict.outcome == "degraded"
+    assert flaky.calls == 2             # 1 + max_retries attempts
+    assert srv.telemetry()["events"]["lm"]["job_failed"] == 1
+
+
+def test_without_resilience_failures_still_propagate():
+    srv = _single_lm(_Flaky(10 ** 6))
+    t = srv.submit("lm", 4)
+    with pytest.raises(RuntimeError, match="transient"):
+        srv.run(hyperperiods=1)
+    assert t.status == "failed"         # the legacy contract is untouched
+    with pytest.raises(ServeError, match="failed"):
+        t.result()
+
+
+def test_breaker_trips_degrades_and_recovers_via_probe():
+    flaky = _Flaky(10 ** 6)
+    srv = _single_lm(flaky)
+    srv.enable_resilience(retry=RetryPolicy(max_retries=0),
+                          breaker=BreakerPolicy(threshold=2,
+                                                cooldown_jobs=2))
+    t1 = srv.submit("lm", 1)
+    srv.step()
+    t2 = srv.submit("lm", 2)
+    srv.step()                          # 2 consecutive failed jobs: trip
+    assert t1.status == t2.status == "degraded"
+    assert srv.telemetry()["breakers"]["lm"] == "open"
+    t3 = srv.submit("lm", 3)            # open: degrade at submit, no queue
+    assert t3.status == "degraded" and t3.result().verdict.outcome == \
+        "degraded"
+    srv.step()                          # cooldown release 1 (skip)
+    flaky.fails = 0                     # executor heals
+    srv.step()                          # cooldown release 2 -> half-open
+    assert srv.telemetry()["breakers"]["lm"] == "half_open"
+    t4 = srv.submit("lm", 4)            # half-open still queues (probe food)
+    assert t4.status == "queued"
+    srv.step()                          # probe succeeds -> closed
+    assert t4.done and t4.result().output == 5
+    assert srv.telemetry()["breakers"]["lm"] == "closed"
+    ev = srv.telemetry()["events"]["lm"]
+    assert ev["breaker_open"] == 1 and ev["breaker_close"] == 1
+    assert srv.metrics["degraded"] == 3
+
+
+# -- mixed-criticality overload shedding --------------------------------------
+
+def test_overload_policy_validation():
+    with pytest.raises(ValueError, match="hysteresis|flapping"):
+        OverloadPolicy(shed_queue_frac=0.5, restore_queue_frac=0.5)
+    with pytest.raises(ValueError, match="restore_hyperperiods"):
+        OverloadPolicy(restore_hyperperiods=0)
+
+
+def test_overload_sheds_lowest_criticality_then_restores():
+    srv = _two_tier(overload=OverloadPolicy(shed_queue_frac=0.5,
+                                            restore_queue_frac=0.25,
+                                            restore_hyperperiods=2))
+    lo_tickets = [srv.submit("lo", i) for i in range(3)]   # 3 >= 0.5 * 4
+    srv.step()                          # boundary: shed before executing
+    assert srv.shed_networks == ["lo"]
+    # WCET analysis re-ran on the surviving set only
+    assert set(srv.report.response_bounds) == {"hi"}
+    for t in lo_tickets:
+        assert t.status == "degraded" and t.terminal
+        assert t.result().verdict.outcome == "degraded"
+        assert not t.result().verdict.met
+    late = srv.submit("lo", 9)          # shed queue is paused
+    assert late.status == "degraded"
+    assert srv.metrics["sheds"] == 1
+    assert srv.telemetry()["shed"] == ["lo"]
+    # two consecutive calm boundaries -> hysteretic restore + re-analysis
+    srv.run(hyperperiods=2)
+    assert srv.shed_networks == []
+    assert srv.metrics["restores"] == 1
+    assert set(srv.report.response_bounds) == {"hi", "lo"}
+    ev = srv.telemetry()["events"]["lo"]
+    assert ev["shed"] == 1 and ev["restore"] == 1
+    t = srv.submit("lo", 4)
+    srv.run(hyperperiods=1)
+    assert t.done and t.result().output == 8
+
+
+def test_shed_refuses_last_active_network_and_manual_api():
+    srv = _two_tier()
+    srv.shed("lo")                      # manual shed works without a policy
+    assert srv.shed_networks == ["lo"]
+    with pytest.raises(ServeError, match="only"):
+        srv.shed("hi")
+    with pytest.raises(ServeError, match="not shed"):
+        srv.restore("hi")
+    assert srv.restore() == "lo"
+    assert srv.shed_networks == []
+
+
+def test_clock_stays_monotonic_across_shed_and_restore():
+    srv = _two_tier(overload=OverloadPolicy(shed_queue_frac=0.5,
+                                            restore_queue_frac=0.25,
+                                            restore_hyperperiods=1))
+    t0 = srv.submit("hi", _frame(0))
+    srv.run(hyperperiods=1)
+    for i in range(3):
+        srv.submit("lo", i)             # trigger a shed at the next boundary
+    srv.run(hyperperiods=2)             # shed, then calm restore
+    assert srv.metrics["sheds"] == 1 and srv.metrics["restores"] == 1
+    t1 = srv.submit("hi", _frame(1))
+    srv.run(hyperperiods=1)
+    # absolute release timestamps never run backwards across the two
+    # schedule changes (clock_base_s carries the completed hyperperiods)
+    assert t1.result().release_s >= t0.result().release_s
+    assert srv.clock_base_s > 0
+
+
+# -- atomic mode changes ------------------------------------------------------
+
+def test_mode_validation():
+    with pytest.raises(ModeChangeError, match="no networks"):
+        Mode("empty", ())
+    with pytest.raises(ModeChangeError, match="duplicate"):
+        Mode("dup", (ModeNetwork("a", cnn.small_cnn(), 0.1),
+                     ModeNetwork("a", cnn.small_cnn(), 0.1)))
+    m = Mode("ok", (ModeNetwork("a", cnn.small_cnn(), 0.1),))
+    assert m.network_names() == ["a"]
+
+
+def _parking_mode():
+    return Mode("parking", (
+        ModeNetwork("hi", cnn.small_cnn(), period_s=1 / 25, slots=2,
+                    criticality=2),
+        ModeNetwork("park", cnn.small_cnn(), period_s=1 / 25, slots=2,
+                    criticality=1),
+    ))
+
+
+def test_mode_switch_applies_only_at_hyperperiod_boundary():
+    srv = _two_tier()
+    njobs = len(srv.compiled.jobs)
+    assert njobs >= 2                   # the boundary test needs a mid-point
+    t_lo = srv.submit("lo", 21)
+    srv.step()                          # now mid-hyperperiod
+    assert srv._cursor != 0
+    report = srv.switch_mode(_parking_mode())
+    assert report.schedulable
+    # staged but NOT applied: the old taskset keeps serving
+    assert set(srv.networks) == {"hi", "lo"} and srv.mode_name is None
+    while srv._cursor != 0:             # drain the current hyperperiod
+        srv.step()
+    # the boundary itself has not been crossed by a step yet
+    assert set(srv.networks) == {"hi", "lo"}
+    assert t_lo.done                    # drained under the OLD schedule
+    t_lo2 = srv.submit("lo", 22)        # will not see another lo job
+    t_hi = srv.submit("hi", _frame(3))  # persists into the new mode
+    srv.step()                          # first step past the boundary: swap
+    assert srv.mode_name == "parking"
+    assert set(srv.networks) == {"hi", "park"}
+    assert srv.metrics["mode_switches"] == 1
+    # departing network's ticket resolved terminally, not hung
+    assert t_lo2.status == "dropped"
+    assert t_lo2.result().verdict.outcome == "dropped"
+    # the persisting network's queue carried over and serves under the
+    # NEW schedule, with the absolute clock carried forward
+    srv.run(hyperperiods=1)
+    assert t_hi.done
+    assert t_hi.result().release_s >= srv.clock_base_s > 0
+    assert srv.telemetry()["mode"] == "parking"
+
+
+def test_mode_switch_rejection_is_atomic():
+    srv = _two_tier()
+    bad = Mode("impossible", (
+        ModeNetwork("hi", cnn.small_cnn(), period_s=1 / 50,
+                    deadline_s=1e-9),))
+    with pytest.raises(AdmissionError):
+        srv.switch_mode(bad)
+    assert srv._staged_mode is None     # nothing staged
+    assert set(srv.networks) == {"hi", "lo"} and srv.mode_name is None
+    t = srv.submit("hi", _frame())      # current mode still serves
+    srv.run(hyperperiods=1)
+    assert t.done
+
+
+def test_mode_switch_on_idle_server_applies_immediately():
+    srv = Server(HW, backend="numpy", num_cores=4, speed_ratio=1e9)
+    srv.register("hi", cnn.small_cnn(), period_s=1 / 50, slots=2)
+    srv.switch_mode(_parking_mode())    # cursor 0: no wait needed
+    assert srv.mode_name == "parking"
+    assert set(srv.networks) == {"hi", "park"}
+    t = srv.submit("park", _frame(1))
+    srv.run(hyperperiods=1)
+    assert t.done
+
+
+# -- chaos: end-to-end fault injection ---------------------------------------
+
+@pytest.mark.chaos
+def test_chaos_every_ticket_terminal_high_criticality_clean():
+    """The acceptance bar: under a seeded fault burst on the low-crit
+    network, every ticket terminates and the high-criticality network
+    shows ZERO deadline misses."""
+    srv = _two_tier(queue_capacity=4, queue_policy="drop-oldest")
+    plan = FaultPlan(seed=7, fail_rate=0.35, timeout_rate=0.15,
+                     spike_rate=0.1, networks=("lo",))
+    srv.enable_resilience(faults=plan, retry=RetryPolicy(max_retries=1),
+                          breaker=BreakerPolicy(threshold=2,
+                                                cooldown_jobs=2))
+    tickets = []
+    for k in range(12):
+        tickets += [srv.submit("hi", _frame(2 * k + i)) for i in range(2)]
+        tickets += [srv.submit("lo", int(k)) for _ in range(2)]
+        srv.run(hyperperiods=1)
+    while any(srv.queue_depths().values()):
+        srv.run(hyperperiods=1)         # drain the low-crit backlog
+    assert all(t.terminal for t in tickets), \
+        sorted({t.status for t in tickets if not t.terminal})
+    hi = [t for t in tickets if t.network == "hi"]
+    assert all(t.done and t.result().verdict.met for t in hi)
+    tele = srv.telemetry()
+    assert tele["networks"]["hi"]["misses"] == 0
+    assert srv.resilience.injector.injected["fail"] > 0
+    # faults were absorbed, not propagated: run() never raised, and the
+    # recovery machinery visibly engaged (the lo backlog also overran its
+    # bounded queue, so drop-oldest evictions resolved terminally too)
+    assert srv.metrics["retries"] > 0
+    assert srv.metrics["dropped"] > 0
+
+
+@pytest.mark.chaos
+def test_chaos_run_is_reproducible_from_its_seed():
+    def run_once():
+        srv = _two_tier(queue_capacity=4, queue_policy="drop-oldest")
+        plan = FaultPlan(seed=11, fail_rate=0.4, networks=("lo",))
+        srv.enable_resilience(faults=plan,
+                              retry=RetryPolicy(max_retries=1),
+                              breaker=BreakerPolicy(threshold=2,
+                                                    cooldown_jobs=2))
+        statuses = []
+        for k in range(10):
+            t = srv.submit("lo", int(k))
+            srv.run(hyperperiods=1)
+            statuses.append(t.status)
+        m = srv.metrics
+        return statuses, m["retries"], m["degraded"], \
+            srv.resilience.injector.injected
+    assert run_once() == run_once()
+
+
+# -- continuous engine fault hook --------------------------------------------
+
+def test_continuous_fault_hook_is_resumable_and_spikes():
+    calls = {"n": 0}
+
+    def hook():
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise InjectedFailure("injected decode fault")
+        return "spike" if calls["n"] == 3 else None
+
+    mon = DeadlineMonitor(speed_ratio=1.0, slack_factor=1.0)
+    eng = ContinuousEngine(ToyBackend(slots=2), max_tokens=8,
+                           monitor=mon, step_bound_s=1e-12, network="toy",
+                           fault_hook=hook, spike_factor=1e6)
+    eng.enqueue([1, 2], 5)
+    eng.step()
+    with pytest.raises(InjectedFailure):
+        eng.step()                      # raised BEFORE any state mutation
+    done = eng.drain()                  # a clean retry resumes the stream
+    assert [r.out for r in done] == toy_reference([[1, 2]], [5])
+    assert mon.misses.get("toy", 0) >= 1   # the spiked step blew its budget
+
+
+# -- DeadlineMonitor reset (satellite b) --------------------------------------
+
+def test_monitor_reset_clears_occupancy_events_and_windows():
+    m = DeadlineMonitor(speed_ratio=1.0, slack_factor=1.0)
+    m.record_occupancy("n", 3, 4)
+    m.check("n", 10.0, 1.0)             # a miss
+    m.record_event("n", "shed")
+    assert m.mean_occupancy("n") == pytest.approx(0.75)
+    assert m.recent_miss_rate("n") == 1.0
+    m.reset(recalibrate=True)
+    # EVERY accumulator is back to zero — stale occupancy must not blend
+    # pre-reset state into post-warmup telemetry
+    assert m._occ == {} and m.events == {}
+    assert m.mean_occupancy("n") == 0.0
+    assert m.recent_miss_rate("n") == 0.0
+    assert m.snapshot()["networks"] == {} and m.snapshot()["events"] == {}
+    assert m.speed_ratio == 1.0         # pinned ratio survives recalibrate
+    m2 = DeadlineMonitor()
+    m2.check("x", 0.5, 0.1)
+    assert m2.speed_ratio is not None
+    m2.reset(recalibrate=True)          # measured ratio is forgotten
+    assert m2.speed_ratio is None
+
+
+def test_recent_miss_rate_recovers_where_cumulative_is_sticky():
+    m = DeadlineMonitor(speed_ratio=1.0, slack_factor=1.0)
+    for _ in range(10):
+        m.check("n", 10.0, 1.0)         # a bad burst
+    for _ in range(32):
+        m.check("n", 0.1, 1.0)          # long recovery
+    assert m.miss_rate("n") > 0.2       # cumulative stays polluted
+    assert m.recent_miss_rate("n", window=32) == 0.0
+
+
+# -- save/load round trip with a decode network (satellite c) -----------------
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = get_config("smollm-135m", reduced=True)
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+def test_save_load_round_trip_with_decode_network(lm, tmp_path):
+    cfg, params = lm
+    srv = Server(HW, backend="numpy", num_cores=4, speed_ratio=1e9)
+    srv.register("cnn", cnn.small_cnn(), period_s=1 / 50, slots=2,
+                 criticality=1)
+    srv.register_decode("lm", cfg, period_s=0.05, params=params, slots=2,
+                        criticality=2, prompt_len=6, max_new_tokens=4,
+                        max_len=64)
+    t = srv.submit("lm", [1, 2, 3])     # the engine is live pre-save
+    for _ in range(64):
+        srv.step()
+        if t.done:
+            break
+    assert t.done
+    path = srv.save(str(tmp_path / "fleet"))
+    srv2 = Server.load(path)
+    assert srv2.report.schedulable
+    assert set(srv2.networks) == {"cnn", "lm"}
+    # criticality, bounds and shedding order round-trip exactly
+    assert {s.name: s.criticality for s in srv2.specs} == \
+        {"cnn": 1, "lm": 2}
+    assert srv2.report.response_bounds == \
+        pytest.approx(srv.report.response_bounds)
+    assert srv2.report.shed_order() == srv.report.shed_order()
+    # decode nets come back analysis-only (engines hold device state):
+    # submit fails FAST instead of accepting a ticket that could never
+    # resolve — the terminal guarantee survives the round trip
+    with pytest.raises(ServeError, match="no executor"):
+        srv2.submit("lm", [1, 2, 3])
+    # the executable network serves bit-exact after the round trip
+    x = _frame(5)
+    ta, tb = srv.submit("cnn", x), srv2.submit("cnn", x)
+    srv.run(hyperperiods=1)
+    srv2.run(hyperperiods=1)
+    for k, v in ta.result().output.items():
+        np.testing.assert_array_equal(v, tb.result().output[k])

@@ -107,12 +107,18 @@ def test_queue_drop_oldest_policy():
     t1 = srv.submit("cnn", _frame(1))
     t2 = srv.submit("cnn", _frame(2))
     t3 = srv.submit("cnn", _frame(3))
-    assert t1.status == "dropped"
-    with pytest.raises(ServeError, match="dropped"):
-        t1.result()
+    # the evicted ticket resolves TERMINALLY: result() answers with a
+    # met=False "dropped" verdict instead of hanging (or raising) forever
+    assert t1.status == "dropped" and t1.terminal
+    r1 = t1.result()
+    assert r1.output is None
+    assert r1.verdict.outcome == "dropped" and not r1.verdict.met
     srv.run(hyperperiods=1)
     assert t2.done and t3.done
-    assert srv.telemetry()["dropped"]["cnn"] == 1
+    tele = srv.telemetry()
+    assert tele["dropped"]["cnn"] == 1
+    assert tele["metrics"]["dropped"] == 1
+    assert tele["events"]["cnn"]["dropped"] == 1
 
 
 def test_request_queue_validation():

@@ -35,10 +35,13 @@ import json
 import os
 import sys
 
-# speedup keys gated per preset. compiled_pallas is reported in the JSON
-# but NOT gated: on CPU CI it runs in Pallas interpret mode, whose timing
-# characterizes the XLA fallback lowering rather than the kernels.
-GATED_KEYS = ("speedup_np_vs_seed", "speedup_jax_b8_vs_seed")
+# speedup keys gated per preset. speedup_pallas_vs_seed is gated since the
+# megakernel backend landed: the fused per-core lowering is fast enough in
+# interpret mode on CPU CI that its seed-relative ratio is a stable signal
+# (a regression there means the megakernel planner or the fused-kernel
+# emission got slower, not CI noise — ratios are measured in-process).
+GATED_KEYS = ("speedup_np_vs_seed", "speedup_jax_b8_vs_seed",
+              "speedup_pallas_vs_seed")
 
 # serve keys gated from BENCH_serve.json["continuous"]: the wall-clock
 # ratio of the static batch-to-completion path over the continuous loop

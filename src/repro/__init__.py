@@ -14,6 +14,7 @@ the bare package stays dependency-free (the compiler pulls in jax)."""
 __version__ = "1.1.0"
 
 _COMPILER_EXPORTS = ("compile", "Deployment", "TasksetDeployment",
+                     "BackendOptions", "BackendCapabilities", "BackendError",
                      "compiler")
 
 

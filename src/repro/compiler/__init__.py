@@ -17,7 +17,8 @@ See docs/api.md for the full tour.
 """
 
 from .api import clear_deployment_cache, compile                # noqa: A004
-from .backends import (Backend, BackendError, get_backend, list_backends,
+from .backends import (Backend, BackendCapabilities, BackendError,
+                       BackendOptions, get_backend, list_backends,
                        register_backend, unregister_backend)
 from .deployment import (ARTIFACT_FORMAT, BUNDLE_FORMAT, ArtifactError,
                          Deployment, TasksetDeployment, load_bundle,
@@ -31,7 +32,8 @@ __all__ = [
     "compile", "clear_deployment_cache",
     "Deployment", "TasksetDeployment", "ArtifactError", "ARTIFACT_FORMAT",
     "save_bundle", "load_bundle", "BUNDLE_FORMAT",
-    "Backend", "BackendError", "register_backend", "unregister_backend",
+    "Backend", "BackendCapabilities", "BackendOptions", "BackendError",
+    "register_backend", "unregister_backend",
     "get_backend", "list_backends",
     "Pass", "PassManager", "PassContext", "StageRecord", "default_passes",
     "QuantizePass", "PartitionPass", "MapPass", "SchedulePass", "WCETPass",

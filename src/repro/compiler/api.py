@@ -10,7 +10,8 @@ taskset — a list of `NetworkSpec` — (returns `TasksetDeployment` with the
 hyperperiod schedulability report plus per-network deployments).
 
 Deployments are cached on (graph signature, machine fingerprint, backend,
-cores, arbitration, validate, params identity) through the same LRU
+backend options, cores, arbitration, validate, params identity) through the
+same LRU
 discipline as
 the program cache in `repro.core.compiled`; `repro.core.clear_program_cache`
 clears both.
@@ -27,7 +28,7 @@ from ..core.graph import Graph
 from ..core.taskset import NetworkSpec
 from ..core.wcet import analyze_taskset
 from ..hw import HardwareModel
-from .backends import get_backend
+from .backends import BackendOptions, get_backend
 from .deployment import Deployment, TasksetDeployment
 from .pipeline import PassContext, PassManager, default_passes
 
@@ -45,14 +46,18 @@ def compile(graph_or_taskset, machine: HardwareModel, *,   # noqa: A001
             backend: str = "jax", deadline: float | None = None,
             params: dict | None = None, num_cores: int | None = None,
             arbitration: str = "static", validate: bool = True,
-            use_cache: bool = True):
+            use_cache: bool = True,
+            backend_options: BackendOptions | None = None):
     """Compile a graph (or taskset) for `machine` into a deployment.
 
     Single network: runs the staged pass pipeline (quantize -> partition ->
     map -> schedule -> wcet -> lower) and returns a `Deployment`. `params`
     may be a complete weights dict, a partial one (missing entries are
     synthesized), or None. `deadline` (seconds) makes compilation fail with
-    `DeadlineError` if the WCET bound exceeds it.
+    `DeadlineError` if the WCET bound exceeds it. `backend_options` (a
+    `BackendOptions`) carries typed execution knobs — interpret mode,
+    megakernel on/off, tile overrides — validated here against the
+    backend's capabilities and persisted with the deployment artifact.
 
     Taskset (a sequence of `NetworkSpec`): runs the hyperperiod analysis
     and compiles an executable `Deployment` for every member network whose
@@ -60,12 +65,15 @@ def compile(graph_or_taskset, machine: HardwareModel, *,   # noqa: A001
     then a {network_name: params_dict} mapping and per-network deadlines
     come from the specs (the `deadline` argument must be None).
     """
-    get_backend(backend)                     # fail fast on unknown backend
+    options = backend_options or BackendOptions()
+    # fail fast on unknown backend / unsupported options
+    get_backend(backend).validate_options(options)
     if isinstance(graph_or_taskset, Graph):
         return _compile_graph(graph_or_taskset, machine, backend=backend,
                               deadline=deadline, params=params,
                               num_cores=num_cores, arbitration=arbitration,
-                              validate=validate, use_cache=use_cache)
+                              validate=validate, use_cache=use_cache,
+                              options=options)
     if (isinstance(graph_or_taskset, Sequence)
             and graph_or_taskset
             and all(isinstance(s, NetworkSpec) for s in graph_or_taskset)):
@@ -76,7 +84,8 @@ def compile(graph_or_taskset, machine: HardwareModel, *,   # noqa: A001
         return _compile_taskset(list(graph_or_taskset), machine,
                                 backend=backend, params_by_net=params or {},
                                 num_cores=num_cores, arbitration=arbitration,
-                                validate=validate, use_cache=use_cache)
+                                validate=validate, use_cache=use_cache,
+                                options=options)
     raise TypeError(
         "repro.compile expects a Graph or a non-empty sequence of "
         f"NetworkSpec, got {type(graph_or_taskset).__name__}")
@@ -85,10 +94,13 @@ def compile(graph_or_taskset, machine: HardwareModel, *,   # noqa: A001
 def _compile_graph(graph: Graph, machine: HardwareModel, *, backend: str,
                    deadline: float | None, params: dict | None,
                    num_cores: int | None, arbitration: str, validate: bool,
-                   use_cache: bool) -> Deployment:
+                   use_cache: bool,
+                   options: BackendOptions | None = None) -> Deployment:
+    options = options or BackendOptions()
     params_key = None if params is None else id(params)
     key = (graph_signature(graph), machine.fingerprint(), backend,
-           num_cores, arbitration, bool(validate), params_key)
+           options.cache_key(), num_cores, arbitration, bool(validate),
+           params_key)
     if use_cache:
         hit = _DEPLOYMENT_CACHE.get(key)
         if hit is not None and hit[0] is params:
@@ -103,7 +115,8 @@ def _compile_graph(graph: Graph, machine: HardwareModel, *, backend: str,
     PassManager(default_passes()).run(ctx)
     dep = Deployment(program=ctx.program, schedule=ctx.schedule,
                      report=ctx.report, machine=machine, backend=backend,
-                     stages=ctx.stages, artifacts=ctx.artifacts)
+                     options=options, stages=ctx.stages,
+                     artifacts=ctx.artifacts)
     if use_cache:
         _DEPLOYMENT_CACHE[key] = (params, dep)
         while len(_DEPLOYMENT_CACHE) > _DEPLOYMENT_CACHE_CAP:
@@ -121,7 +134,10 @@ def _check_deadline(dep: Deployment, deadline: float | None) -> None:
 def _compile_taskset(specs: list[NetworkSpec], machine: HardwareModel, *,
                      backend: str, params_by_net: dict,
                      num_cores: int | None, arbitration: str,
-                     validate: bool, use_cache: bool) -> TasksetDeployment:
+                     validate: bool, use_cache: bool,
+                     options: BackendOptions | None = None
+                     ) -> TasksetDeployment:
+    options = options or BackendOptions()
     report, compiled = analyze_taskset(specs, machine, num_cores,
                                        arbitration=arbitration,
                                        validate=validate)
@@ -132,10 +148,11 @@ def _compile_taskset(specs: list[NetworkSpec], machine: HardwareModel, *,
         deployments[spec.name] = _compile_graph(
             spec.graph, machine, backend=backend, deadline=None,
             params=params_by_net.get(spec.name), num_cores=num_cores,
-            arbitration=arbitration, validate=validate, use_cache=use_cache)
+            arbitration=arbitration, validate=validate, use_cache=use_cache,
+            options=options)
     return TasksetDeployment(report=report, taskset=compiled,
                              deployments=deployments, machine=machine,
-                             backend=backend)
+                             backend=backend, options=options)
 
 
 def clear_deployment_cache() -> None:

@@ -1,9 +1,10 @@
-"""Backend registry: named execution strategies over a CompiledProgram.
+"""Backend registry: capability-aware execution strategies over a
+CompiledProgram.
 
 One lowered program, many ways to replay it. Each backend is registered by
 name and provides two factories — `single` (one sample) and `batched`
-(leading batch axis) — that take a `CompiledProgram` and return a runner
-with the uniform serving contract:
+(leading batch axis) — that take a `CompiledProgram` and a `BackendOptions`
+and return a runner with the uniform serving contract:
 
     runner({input_name: np.ndarray, ...}) -> {output_name: np.ndarray, ...}
 
@@ -13,60 +14,204 @@ all go through this table, so a third-party backend (a new kernel library,
 a remote accelerator client) plugs in with one `register_backend` call and
 is immediately selectable as `repro.compile(..., backend="mine")`.
 
+Every backend carries a `BackendCapabilities` descriptor so callers can
+validate a (backend, options) pair *before* building a runner —
+`Deployment.with_backend` checks at swap time, `repro.compile` at compile
+time — instead of failing on the first `run`. Execution knobs travel as a
+typed, frozen `BackendOptions` (accepted as
+``repro.compile(..., backend_options=...)``, carried through `Deployment`
+save/load and `Server`), replacing the old ad-hoc ``interpret=None``
+auto-detection scattered through `repro.core.compiled`.
+
 Built-in backends (see repro/core/compiled.py for their numerics):
 
   * ``numpy``  — vectorized fused-tile replay; bit-exact oracle twin.
   * ``jax``    — the whole program as one jitted (and, batched, vmapped)
     XLA function; the serving fast path.
-  * ``pallas`` — gemm/conv tile batches on the Pallas kernels; real Mosaic
-    lowering on TPU, interpret mode elsewhere.
+  * ``pallas`` — the fused per-core megakernel over the Pallas kernels
+    (`repro.core.megakernel`): <= num_cores `pallas_call`s per program,
+    requant fused in epilogues, scratchpad-budgeted segments. Real Mosaic
+    lowering on TPU, interpret mode elsewhere. ``megakernel=False`` in the
+    options falls back to the per-op kernel path.
+
+Deprecation: `register_backend` factories used to take just the program
+(``factory(prog)``). Those still work — they are wrapped with a shim that
+drops the options argument and emits a `DeprecationWarning` at
+registration — but new backends should accept ``(prog, options)``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
+import inspect
+import warnings
 from typing import Callable
 
 import numpy as np
 
 from ..core import compiled as _C
+from ..core import megakernel as _MK
 
 
 class BackendError(KeyError):
-    """Unknown or conflicting backend registration."""
+    """Unknown backend, conflicting registration, or an option the target
+    backend does not support."""
 
 
 Runner = Callable[[dict], dict]
 
 
 @dataclasses.dataclass(frozen=True)
+class BackendOptions:
+    """Typed execution knobs, validated against a backend's capabilities.
+
+    All fields default to None ("backend decides"), so a default instance
+    is valid for every backend. Fields:
+
+      interpret          — Pallas interpret mode. None: auto (real Mosaic
+                           lowering on TPU, interpret elsewhere); False
+                           requires the backend's `requires_device`.
+      megakernel         — fused per-core megakernel on/off (None: on for
+                           the pallas backend).
+      scratchpad_budget  — bytes; overrides the machine scratchpad capacity
+                           the megakernel planner and kernel tile
+                           derivation use (the tile-override knob).
+      max_kernels        — cap on emitted pallas_calls per program
+                           (None: the program's core count).
+    """
+
+    interpret: bool | None = None
+    megakernel: bool | None = None
+    scratchpad_budget: int | None = None
+    max_kernels: int | None = None
+
+    def set_fields(self) -> tuple[str, ...]:
+        """Names of explicitly-set (non-None) fields — what capability
+        validation checks against `supported_options`."""
+        return tuple(f.name for f in dataclasses.fields(self)
+                     if getattr(self, f.name) is not None)
+
+    def cache_key(self) -> tuple:
+        """Hashable identity for runner/deployment caches."""
+        return tuple((f.name, getattr(self, f.name))
+                     for f in dataclasses.fields(self))
+
+    def to_manifest(self) -> dict:
+        """JSON-safe dict of the set fields (deployment artifacts)."""
+        return {name: getattr(self, name) for name in self.set_fields()}
+
+    @classmethod
+    def from_manifest(cls, d: dict | None) -> "BackendOptions":
+        """Lenient inverse of `to_manifest`: unknown keys (newer artifacts)
+        are ignored, absent ones default."""
+        d = d or {}
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendCapabilities:
+    """What a backend can do — checked before runners are built.
+
+    supports_batched_native — the batched factory is a real batched
+        lowering, not the per-sample fallback loop.
+    supports_decode — usable for LM decode step functions (serving loops).
+    requires_device — jax platform needed for native execution (e.g.
+        "tpu"); `interpret=False` off that device fails validation.
+    supported_options — `BackendOptions` field names this backend honors;
+        explicitly-set fields outside this set fail validation.
+    """
+
+    supports_batched_native: bool = False
+    supports_decode: bool = False
+    requires_device: str | None = None
+    supported_options: frozenset = frozenset()
+
+
+@dataclasses.dataclass(frozen=True)
 class Backend:
-    """A named pair of runner factories over a lowered program."""
+    """A named pair of options-aware runner factories + capabilities."""
 
     name: str
-    single: Callable[[_C.CompiledProgram], Runner]
-    batched: Callable[[_C.CompiledProgram], Runner]
+    single: Callable[[_C.CompiledProgram, BackendOptions], Runner]
+    batched: Callable[[_C.CompiledProgram, BackendOptions], Runner]
+    capabilities: BackendCapabilities = BackendCapabilities()
+
+    def validate_options(self, options: BackendOptions) -> None:
+        """Raise `BackendError` if `options` sets a knob this backend does
+        not support, or demands native execution off the required device.
+        A default (all-None) options object always validates."""
+        unsupported = [f for f in options.set_fields()
+                       if f not in self.capabilities.supported_options]
+        if unsupported:
+            raise BackendError(
+                f"backend {self.name!r} does not support option(s) "
+                f"{unsupported}; supported: "
+                f"{sorted(self.capabilities.supported_options)}")
+        dev = self.capabilities.requires_device
+        if options.interpret is False and dev is not None:
+            import jax
+            if jax.default_backend() != dev:
+                raise BackendError(
+                    f"backend {self.name!r} with interpret=False requires "
+                    f"a {dev!r} device (running on "
+                    f"{jax.default_backend()!r}); use interpret=None/True")
 
 
 _REGISTRY: dict[str, Backend] = {}
 
 
+def _adapt_factory(factory, name: str, which: str):
+    """Accept both factory signatures: (prog, options) and legacy (prog).
+
+    Legacy single-argument factories are wrapped to drop the options and
+    warned about once, at registration."""
+    try:
+        sig = inspect.signature(factory)
+    except (TypeError, ValueError):
+        return factory                       # builtins etc.: assume new
+    params = list(sig.parameters.values())
+    if any(p.kind == p.VAR_POSITIONAL for p in params):
+        return factory
+    positional = [p for p in params
+                  if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)]
+    if len(positional) >= 2:
+        return factory
+    warnings.warn(
+        f"backend {name!r} {which} factory takes only (prog); factories "
+        "should accept (prog, options: BackendOptions). The legacy "
+        "signature is wrapped for now and will stop working in a future "
+        "release.", DeprecationWarning, stacklevel=3)
+
+    def adapted(prog, options):
+        return factory(prog)
+    return adapted
+
+
 def register_backend(name: str, *,
-                     single: Callable[[_C.CompiledProgram], Runner],
-                     batched: Callable[[_C.CompiledProgram], Runner] | None
-                     = None,
+                     single: Callable,
+                     batched: Callable | None = None,
+                     capabilities: BackendCapabilities | None = None,
                      overwrite: bool = False) -> Backend:
     """Register (or replace, with overwrite=True) an execution backend.
 
     `batched` defaults to a per-sample loop over `single` — correct for any
-    backend, so plugins only need the single-sample runner."""
+    backend, so plugins only need the single-sample runner. Factories take
+    ``(prog, options)``; the legacy ``(prog)`` signature still works via a
+    deprecation shim."""
     if name in _REGISTRY and not overwrite:
         raise BackendError(
             f"backend {name!r} already registered; pass overwrite=True")
+    single = _adapt_factory(single, name, "single")
+    has_native_batched = batched is not None
     if batched is None:
         batched = _loop_batched(single)
-    be = Backend(name=name, single=single, batched=batched)
+    else:
+        batched = _adapt_factory(batched, name, "batched")
+    caps = capabilities or BackendCapabilities(
+        supports_batched_native=has_native_batched)
+    be = Backend(name=name, single=single, batched=batched,
+                 capabilities=caps)
     _REGISTRY[name] = be
     return be
 
@@ -90,8 +235,9 @@ def list_backends() -> list[str]:
 
 def _loop_batched(single_factory):
     """Default batched factory: run `single` per sample and stack."""
-    def factory(prog: _C.CompiledProgram) -> Runner:
-        single = single_factory(prog)
+    def factory(prog: _C.CompiledProgram,
+                options: BackendOptions | None = None) -> Runner:
+        single = single_factory(prog, options or BackendOptions())
 
         def run(batch: dict) -> dict:
             B = next(iter(batch.values())).shape[0]
@@ -104,40 +250,77 @@ def _loop_batched(single_factory):
 
 
 # -- built-in backends --------------------------------------------------------
+# Builtin factories default `options` so the legacy direct-invocation form
+# (`get_backend("numpy").single(prog)`, used by wrapping third-party
+# backends) keeps working alongside the registry's (prog, options) calls.
 
-def _numpy_single(prog: _C.CompiledProgram) -> Runner:
+def _numpy_single(prog: _C.CompiledProgram,
+                  options: BackendOptions | None = None) -> Runner:
     def run(inputs: dict) -> dict:
         vals = _C.run_numpy(prog, inputs)      # exposes every buffer
         return {t: vals[t] for t in prog.graph.outputs}
     return run
 
 
-def _jax_single(prog: _C.CompiledProgram) -> Runner:
+def _jax_single(prog: _C.CompiledProgram,
+                options: BackendOptions | None = None) -> Runner:
+    import functools
     _C.jit_single(prog)                        # trace once at build time
     return functools.partial(_C.run_jax, prog, batched=False)
 
 
-def _jax_batched(prog: _C.CompiledProgram) -> Runner:
+def _jax_batched(prog: _C.CompiledProgram,
+                 options: BackendOptions | None = None) -> Runner:
+    import functools
     _C.jit_batched(prog)
     return functools.partial(_C.run_jax, prog, batched=True)
 
 
-def _pallas_single(prog: _C.CompiledProgram) -> Runner:
-    return functools.partial(_C.run_pallas, prog)  # interpret auto off-TPU
-
-
-def _pallas_batched(prog: _C.CompiledProgram) -> Runner:
-    # the one batched path without a core convenience wrapper: jit+vmap
-    # from core, the shared numpy-in/numpy-out contract applied here
+def _numpy_io(fn) -> Runner:
     import jax.numpy as jnp
-    fn = _C.pallas_batched(prog)               # interpret auto off-TPU
 
-    def run(batch: dict) -> dict:
-        out = fn({k: jnp.asarray(v) for k, v in batch.items()})
+    def run(inputs: dict) -> dict:
+        out = fn({k: jnp.asarray(v) for k, v in inputs.items()})
         return {k: np.asarray(v) for k, v in out.items()}
     return run
 
 
-register_backend("numpy", single=_numpy_single)
-register_backend("jax", single=_jax_single, batched=_jax_batched)
-register_backend("pallas", single=_pallas_single, batched=_pallas_batched)
+def _pallas_fn(prog: _C.CompiledProgram, options: BackendOptions,
+               batched: bool):
+    """The traced pallas program for (options, batched): megakernel by
+    default, per-op kernels when megakernel=False."""
+    interpret = _C.resolve_interpret(options.interpret)
+    if options.megakernel is False:
+        if batched:
+            return _C.pallas_batched(prog, interpret)
+        return _C.jit_pallas_single(prog, interpret)
+    make = _MK.megakernel_batched if batched else _MK.jit_megakernel_single
+    return make(prog, interpret=interpret,
+                budget=options.scratchpad_budget,
+                max_kernels=options.max_kernels)
+
+
+def _pallas_single(prog: _C.CompiledProgram,
+                   options: BackendOptions | None = None) -> Runner:
+    return _numpy_io(_pallas_fn(prog, options or BackendOptions(),
+                                batched=False))
+
+
+def _pallas_batched(prog: _C.CompiledProgram,
+                    options: BackendOptions | None = None) -> Runner:
+    return _numpy_io(_pallas_fn(prog, options or BackendOptions(),
+                                batched=True))
+
+
+register_backend("numpy", single=_numpy_single,
+                 capabilities=BackendCapabilities())
+register_backend("jax", single=_jax_single, batched=_jax_batched,
+                 capabilities=BackendCapabilities(
+                     supports_batched_native=True, supports_decode=True))
+register_backend("pallas", single=_pallas_single, batched=_pallas_batched,
+                 capabilities=BackendCapabilities(
+                     supports_batched_native=True,
+                     requires_device="tpu",
+                     supported_options=frozenset(
+                         {"interpret", "megakernel", "scratchpad_budget",
+                          "max_kernels"})))

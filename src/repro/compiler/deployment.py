@@ -43,7 +43,7 @@ from ..core.schedule import StaticSchedule
 from ..core.taskset import CompiledTaskset
 from ..core.wcet import TasksetReport, WCETReport
 from ..hw import HardwareModel
-from .backends import get_backend
+from .backends import BackendOptions, get_backend
 from .pipeline import StageRecord
 
 ARTIFACT_FORMAT = 1
@@ -62,6 +62,8 @@ class Deployment:
     report: WCETReport
     machine: HardwareModel
     backend: str = "jax"
+    options: BackendOptions = dataclasses.field(
+        default_factory=BackendOptions)
     stages: list[StageRecord] = dataclasses.field(default_factory=list)
     artifacts: dict = dataclasses.field(default_factory=dict)
     _runners: dict = dataclasses.field(default_factory=dict, repr=False,
@@ -87,13 +89,14 @@ class Deployment:
     # -- execution -----------------------------------------------------------
     def runner(self, *, batched: bool = False, backend: str | None = None):
         """The raw runner callable ({name: array} -> {name: array}) for hot
-        loops; built once per (backend, batched) and cached."""
+        loops; built once per (backend, batched, options) and cached."""
         name = backend or self.backend
-        key = (name, bool(batched))
+        key = (name, bool(batched), self.options.cache_key())
         if key not in self._runners:
             be = get_backend(name)
+            be.validate_options(self.options)
             make = be.batched if batched else be.single
-            self._runners[key] = make(self.program)
+            self._runners[key] = make(self.program, self.options)
         return self._runners[key]
 
     def run(self, inputs, *, batched: bool = False,
@@ -106,11 +109,19 @@ class Deployment:
             inputs = {name: inputs}
         return self.runner(batched=batched, backend=backend)(inputs)
 
-    def with_backend(self, name: str) -> "Deployment":
+    def with_backend(self, name: str,
+                     options: BackendOptions | None = None) -> "Deployment":
         """A view of the same compiled artifact on another backend (shares
-        the program, so jit caches are shared too)."""
-        get_backend(name)                       # fail fast if unknown
-        return dataclasses.replace(self, backend=name)
+        the program, so jit caches are shared too).
+
+        Validated at swap time, not on first `run`: the target backend must
+        exist in the registry AND support the deployment's options (its
+        `BackendCapabilities`) — an invalid swap raises `BackendError`
+        here, before the view is ever handed to a serving loop."""
+        be = get_backend(name)                  # fail fast if unknown
+        opts = self.options if options is None else options
+        be.validate_options(opts)               # capability check at swap
+        return dataclasses.replace(self, backend=name, options=opts)
 
     # -- reporting -----------------------------------------------------------
     def summary(self) -> str:
@@ -133,6 +144,7 @@ class Deployment:
             "machine": self.machine.name,
             "machine_fingerprint": self.machine_fingerprint,
             "backend": self.backend,
+            "backend_options": self.options.to_manifest(),
             "num_cores": self.program.num_cores,
             "wcet_total_s": self.report.wcet_total_s,
         }
@@ -142,7 +154,9 @@ class Deployment:
         payload = {
             "program": self.program, "schedule": self.schedule,
             "report": self.report, "machine": self.machine,
-            "backend": self.backend, "stages": self.stages,
+            "backend": self.backend,
+            "backend_options": self.options.to_manifest(),
+            "stages": self.stages,
             "artifacts": self.artifacts,
         }
         blob = pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL)
@@ -187,7 +201,10 @@ class Deployment:
             dep = cls(program=payload["program"],
                       schedule=payload["schedule"],
                       report=payload["report"], machine=payload["machine"],
-                      backend=payload["backend"], stages=payload["stages"],
+                      backend=payload["backend"],
+                      options=BackendOptions.from_manifest(
+                          payload.get("backend_options")),
+                      stages=payload["stages"],
                       artifacts=payload.get("artifacts", {}))
             manifest_sig = manifest["graph_signature"]
             manifest_fp = manifest["machine_fingerprint"]
@@ -263,6 +280,7 @@ def save_bundle(dirpath: str, deployments: dict[str, Deployment], *,
                          "graph_signature": dep.graph_signature,
                          "machine_fingerprint": dep.machine_fingerprint,
                          "backend": dep.backend,
+                         "backend_options": dep.options.to_manifest(),
                          "wcet_total_s": dep.wcet_bound_s}
     manifest = {"format": BUNDLE_FORMAT, "members": members,
                 "machine_fingerprint": next(iter(fps), None),
@@ -347,6 +365,8 @@ class TasksetDeployment:
     deployments: dict[str, Deployment]
     machine: HardwareModel
     backend: str = "jax"
+    options: BackendOptions = dataclasses.field(
+        default_factory=BackendOptions)
 
     @property
     def schedulable(self) -> bool:

@@ -33,6 +33,7 @@ from .compiled import (CompiledProgram, CompileError, clear_program_cache,
                        compile_graph, graph_signature, jit_batched,
                        lower_program, pallas_batched, run_numpy, run_jax,
                        run_pallas, supports_graph)
+from .megakernel import (count_pallas_calls, plan_segments, run_megakernel)
 from . import cnn, quantize
 
 __all__ = [
@@ -49,5 +50,6 @@ __all__ = [
     "compile_graph", "graph_signature", "jit_batched", "lower_program",
     "pallas_batched", "run_numpy", "run_jax", "run_pallas",
     "supports_graph",
+    "count_pallas_calls", "plan_segments", "run_megakernel",
     "cnn", "quantize",
 ]

@@ -487,6 +487,19 @@ def run_jax(prog: CompiledProgram, inputs: dict[str, np.ndarray],
 PALLAS_KINDS = frozenset({"gemm", "conv2d"})
 
 
+def resolve_interpret(interpret: bool | None = None) -> bool:
+    """Resolve an interpret-mode request against the runtime device.
+
+    ``None`` means auto: real Mosaic lowering on TPU, Pallas interpret mode
+    everywhere else (Pallas cannot lower to the CPU XLA backend). The one
+    place this decision is made — the backend registry's `BackendOptions`
+    and every pallas entry point below route through it.
+    """
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
 @dataclasses.dataclass(frozen=True)
 class _PallasStep:
     """One op of the pallas-backend program plan.
@@ -611,10 +624,8 @@ def jit_pallas_single(prog: CompiledProgram, interpret: bool = False):
 def pallas_batched(prog: CompiledProgram, interpret: bool | None = None):
     """The whole pallas-backend program jitted and vmapped over a leading
     batch axis — the serving step of `BatchedInferenceEngine(backend=
-    "pallas")`. `interpret=None` auto-selects: real Mosaic lowering on TPU,
-    interpret mode elsewhere (Pallas cannot lower to the CPU XLA backend)."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    "pallas")`. `interpret=None` auto-selects via `resolve_interpret`."""
+    interpret = resolve_interpret(interpret)
     key = ("batched", bool(interpret))
     if key not in prog._pallas_cache:
         prog._pallas_cache[key] = jax.jit(
@@ -627,8 +638,6 @@ def run_pallas(prog: CompiledProgram, inputs: dict[str, np.ndarray],
     """Convenience wrapper: one unbatched sample through the jitted pallas
     program; numpy in, numpy out. Returns the graph outputs (like
     `run_jax`, unlike `run_numpy` which exposes every buffer)."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    fn = jit_pallas_single(prog, interpret)
+    fn = jit_pallas_single(prog, resolve_interpret(interpret))
     out = fn({k: jnp.asarray(v) for k, v in inputs.items()})
     return {k: np.asarray(v) for k, v in out.items()}

@@ -1,0 +1,389 @@
+"""Fused per-core megakernel pass over the Pallas program plan.
+
+The per-op pallas backend (`compiled.pallas_single`) issues one
+`pallas_call` per gemm/conv batch — dozens of kernel launches per
+inference, each re-streaming its operands. The paper's machine does the
+opposite: every core executes its whole statically scheduled instruction
+stream out of local scratchpad, with the DMA engine prefetching the next
+tile while the core computes the current one. This pass mirrors that
+structure on the compiled program:
+
+  1. **Segmentation** (`plan_segments`): walk `_pallas_plan`'s steps in
+     program order and greedily pack them into contiguous *segments* whose
+     summed working set — streamed operands counted twice on a dual-ported
+     scratchpad (the i/i+1 double-buffer pair) plus the int32 accumulator
+     and output tile — fits the machine's scratchpad capacity
+     (`hw.scratchpad_bytes`). Each segment is one core's fused stretch of
+     the program and is assigned a core round-robin, so the per-core WCET
+     composition of the schedule survives the fusion (ACETONE-style
+     analyzability: segment boundaries are schedule-visible).
+  2. **Emission**: every fused segment becomes ONE `pallas_call` whose body
+     replays the segment's steps scratchpad-resident — gemms via the exact
+     int8 contraction (`kernels.gemm_int8.dot_i32_exact`: MXU int8 dots on
+     TPU, exactness-preserving chunked-f32 dots under interpret mode),
+     convs via in-kernel im2col (`kernels.conv2d_im2col.im2col_patches`),
+     requantization fused into the epilogues exactly as the per-op plan
+     decided (`_PallasStep.mult`), and fallback kinds via the shared JAX
+     op emitters. A single gemm/conv whose working set alone exceeds the
+     scratchpad falls back to the existing *tiled* kernels
+     (`gemm_int8_pallas` / `conv2d_int8_pallas`), whose grid streaming is
+     Pallas-double-buffered — still one `pallas_call`. Fallback-only steps
+     that fit in no segment run at the XLA level between kernels (zero
+     extra launches, same as the per-op backend).
+  3. **Call-count invariant**: the planner re-packs with a doubled budget
+     until the program emits at most `num_cores` kernels (`max_kernels`
+     override in `BackendOptions`) — the paper's "one program per core"
+     shape. `count_pallas_calls` verifies the invariant on the traced
+     function; the megakernel tests gate on it.
+
+Bit-exactness: every emission path reuses the repo's single requant
+definition (`requant_epilogue`) and exact int8 contractions, so the
+megakernel is bit-identical to `run_numpy` / `reference_forward` on every
+supported graph — the same acceptance bar as the per-op backend.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import compiled as C
+from .graph import conv_out_hw
+from ..kernels.conv2d_im2col import conv2d_int8_pallas, im2col_patches
+from ..kernels.gemm_int8 import (dot_i32_exact, gemm_int8_pallas,
+                                 requant_epilogue)
+
+_ITEM_BYTES = {"int8": 1, "uint8": 1, "int16": 2, "int32": 4,
+               "f32": 4, "bf16": 2}
+
+# fallback capacity when the program carries no hardware model: the paper
+# machine's 1 MiB worker scratchpad
+_DEFAULT_BUDGET = 1 << 20
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """A contiguous run of plan steps with one execution strategy.
+
+    kind: "fused"   — one pallas_call replaying all steps scratch-resident;
+          "tiled"   — one oversized gemm/conv step on the grid-scheduled
+                      double-buffered tiled kernel (one pallas_call);
+          "outside" — one fallback-mode step executed at the XLA level
+                      between kernels (no pallas_call).
+    """
+
+    kind: str
+    steps: tuple
+    core: int = 0
+
+    @property
+    def emits_call(self) -> bool:
+        return self.kind in ("fused", "tiled")
+
+
+def _buffer_bytes(prog: C.CompiledProgram, idx: int) -> int:
+    _, shape, dtype = prog.buffers[idx]
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n * _ITEM_BYTES[dtype]
+
+
+def _step_bytes(prog: C.CompiledProgram, step, dual: bool) -> int:
+    """Scratchpad residency of one step: streamed operands (inputs +
+    weights, double-buffered when the scratchpad is dual-ported) + int32
+    accumulator for matmul kinds + the output tile."""
+    b = step.batch
+    stream = sum(_buffer_bytes(prog, i) for i in b.in_idx)
+    if b.w_idx is not None:
+        stream += _buffer_bytes(prog, b.w_idx)
+    if dual:
+        stream *= 2
+    acc = 0
+    if b.kind in ("gemm", "conv2d"):
+        _, shape, _ = prog.buffers[b.out_idx]
+        n = 1
+        for d in shape:
+            n *= int(d)
+        acc = 4 * n
+    return stream + acc + _buffer_bytes(prog, step.out_idx)
+
+
+def _pack(prog: C.CompiledProgram, plan, budget: int, dual: bool
+          ) -> list[Segment]:
+    segments: list[Segment] = []
+    cur: list = []
+    cur_bytes = 0
+
+    def flush():
+        nonlocal cur, cur_bytes
+        if cur:
+            segments.append(Segment("fused", tuple(cur)))
+            cur, cur_bytes = [], 0
+
+    for step in plan:
+        if step.mode == "skip":      # requant folded into its producer
+            continue
+        sb = _step_bytes(prog, step, dual)
+        if step.mode == "jax":
+            # fallback ops ride inside a fused segment when they fit;
+            # otherwise they run at the XLA level (no kernel launch)
+            if cur and cur_bytes + sb <= budget:
+                cur.append(step)
+                cur_bytes += sb
+            else:
+                flush()
+                segments.append(Segment("outside", (step,)))
+            continue
+        if sb > budget:              # oversized gemm/conv: tiled kernel
+            flush()
+            segments.append(Segment("tiled", (step,)))
+            continue
+        if cur_bytes + sb <= budget:
+            cur.append(step)
+            cur_bytes += sb
+        else:
+            flush()
+            cur, cur_bytes = [step], sb
+    flush()
+    return segments
+
+
+def plan_segments(prog: C.CompiledProgram, *, budget: int | None = None,
+                  max_kernels: int | None = None) -> list[Segment]:
+    """Partition the pallas plan into <= `max_kernels` kernel-emitting
+    segments (default: the program's core count).
+
+    `budget` overrides the scratchpad capacity the packing uses
+    (`BackendOptions.scratchpad_budget`); when the pack exceeds the kernel
+    cap the budget doubles and packing reruns — larger segments, fewer
+    launches — until the per-core invariant holds.
+    """
+    plan = C._pallas_plan(prog)
+    hw = prog.hw
+    cap = max_kernels if max_kernels is not None else max(1, prog.num_cores)
+    b = budget if budget is not None else (
+        hw.scratchpad_bytes if hw is not None else _DEFAULT_BUDGET)
+    dual = hw.dual_ported if hw is not None else True
+    while True:
+        segments = _pack(prog, plan, b, dual)
+        if sum(s.emits_call for s in segments) <= cap:
+            break
+        b *= 2
+    cores = max(1, prog.num_cores)
+    out = []
+    n_call = 0
+    for seg in segments:
+        if seg.emits_call:
+            out.append(dataclasses.replace(seg, core=n_call % cores))
+            n_call += 1
+        else:
+            out.append(seg)
+    return out
+
+
+# -- emission -----------------------------------------------------------------
+
+def _emit_step(step, local: dict, wvals: dict, prog: C.CompiledProgram,
+               via_f32: bool):
+    """Execute one plan step on in-kernel values. local maps buffer idx ->
+    value; wvals maps weight buffer idx -> value."""
+    b = step.batch
+    a = b.attrs
+    if step.mode == "gemm":
+        x = local[b.in_idx[0]].reshape(a["M"], a["K"])
+        acc = dot_i32_exact(x, wvals[b.w_idx], via_f32=via_f32)
+        if step.mult is not None:
+            local[step.out_idx] = requant_epilogue(acc, jnp.asarray(step.mult))
+        else:
+            local[step.out_idx] = acc.astype(
+                C._JNP_DT[prog.buffers[step.out_idx][2]])
+    elif step.mode == "conv2d":
+        cols = im2col_patches(local[b.in_idx[0]], a["kh"], a["kw"],
+                              a["stride"], a["padding"])
+        acc = dot_i32_exact(cols, wvals[b.w_idx], via_f32=via_f32)
+        oh, ow = conv_out_hw(a)
+        if step.mult is not None:
+            out = requant_epilogue(acc, jnp.asarray(step.mult))
+        else:
+            out = acc.astype(C._JNP_DT[prog.buffers[step.out_idx][2]])
+        local[step.out_idx] = out.reshape(oh, ow, a["C_out"])
+    else:                            # "jax": the shared per-op emitters
+        local[b.out_idx] = C._jax_op(b, local, prog, wvals)
+
+
+def _segment_io(prog: C.CompiledProgram, seg: Segment
+                ) -> tuple[list[int], list[int], list[int]]:
+    """(external input idxs, weight idxs, output idxs) of a fused segment.
+
+    Outputs are the produced buffers consumed by a later step outside the
+    segment or that are graph outputs."""
+    produced = {s.out_idx for s in seg.steps}
+    ins: list[int] = []
+    wids: list[int] = []
+    for s in seg.steps:
+        for i in s.batch.in_idx:
+            if i not in produced and i not in ins:
+                ins.append(i)
+        w = s.batch.w_idx
+        if w is not None and w not in wids:
+            wids.append(w)
+    graph_outs = set(prog.graph.outputs)
+    consumed_outside: set[int] = set()
+    for b in prog.batches:
+        if b.op_idx in {s.batch.op_idx for s in seg.steps}:
+            continue
+        consumed_outside.update(b.in_idx)
+    outs = [i for i in sorted(produced)
+            if i in consumed_outside or prog.buffers[i][0] in graph_outs]
+    return ins, wids, outs
+
+
+def _run_fused(prog: C.CompiledProgram, seg: Segment, vals: list,
+               weights: dict, interpret: bool) -> None:
+    ins, wids, outs = _segment_io(prog, seg)
+    steps = seg.steps
+
+    def kernel(*refs):
+        in_refs = refs[:len(ins)]
+        w_refs = refs[len(ins):len(ins) + len(wids)]
+        out_refs = refs[len(ins) + len(wids):]
+        local = {i: r[...] for i, r in zip(ins, in_refs)}
+        wvals = {i: r[...] for i, r in zip(wids, w_refs)}
+        for step in steps:
+            _emit_step(step, local, wvals, prog, via_f32=interpret)
+        for i, r in zip(outs, out_refs):
+            r[...] = local[i]
+
+    out_shape = [jax.ShapeDtypeStruct(tuple(prog.buffers[i][1]),
+                                      C._JNP_DT[prog.buffers[i][2]])
+                 for i in outs]
+    operands = [vals[i] for i in ins] + [weights[i] for i in wids]
+    res = pl.pallas_call(kernel, out_shape=out_shape,
+                         interpret=interpret)(*operands)
+    for i, r in zip(outs, res):
+        vals[i] = r
+
+
+def _run_tiled(prog: C.CompiledProgram, step, vals: list, weights: dict,
+               interpret: bool) -> None:
+    """One oversized step on the grid-scheduled tiled kernel (double-
+    buffered streaming; same emission as the per-op backend)."""
+    b = step.batch
+    a = b.attrs
+    mult = None if step.mult is None else jnp.asarray(step.mult)
+    if step.mode == "gemm":
+        bm, bn, bk = step.blocks
+        x = vals[b.in_idx[0]].reshape(a["M"], a["K"])
+        out = gemm_int8_pallas(x, weights[b.w_idx], mult,
+                               bm=bm, bn=bn, bk=bk, interpret=interpret)
+        if step.mult is None:
+            out = out.astype(C._JNP_DT[prog.buffers[step.out_idx][2]])
+        vals[step.out_idx] = out
+    else:
+        rows_t, bn = step.blocks
+        vals[step.out_idx] = conv2d_int8_pallas(
+            vals[b.in_idx[0]], weights[b.w_idx], mult,
+            kh=a["kh"], kw=a["kw"], stride=a["stride"],
+            padding=a["padding"], rows_t=rows_t, bn=bn,
+            interpret=interpret)
+
+
+def megakernel_single(prog: C.CompiledProgram, *, interpret: bool = False,
+                      budget: int | None = None,
+                      max_kernels: int | None = None):
+    """Single-sample traced function over the segment plan (cached per
+    (interpret, budget, max_kernels) on the program). Same calling
+    convention as `compiled.pallas_single`; bit-exact against it."""
+    key = ("mega_single", bool(interpret), budget, max_kernels)
+    if key not in prog._pallas_cache:
+        segments = plan_segments(prog, budget=budget,
+                                 max_kernels=max_kernels)
+        weights = {i: jnp.asarray(w) for i, w in prog.weights.items()}
+
+        def single(inputs: dict):
+            vals: list = [None] * len(prog.buffers)
+            for name, i in prog.input_idx.items():
+                vals[i] = inputs[name]
+            for seg in segments:
+                if seg.kind == "fused":
+                    _run_fused(prog, seg, vals, weights, interpret)
+                elif seg.kind == "tiled":
+                    _run_tiled(prog, seg.steps[0], vals, weights, interpret)
+                else:                # "outside": XLA-level fallback op
+                    b = seg.steps[0].batch
+                    vals[b.out_idx] = C._jax_op(b, vals, prog, weights)
+            return {name: vals[i] for name, i in prog.output_idx.items()}
+
+        prog._pallas_cache[key] = single
+    return prog._pallas_cache[key]
+
+
+def jit_megakernel_single(prog: C.CompiledProgram, *,
+                          interpret: bool | None = None,
+                          budget: int | None = None,
+                          max_kernels: int | None = None):
+    interpret = C.resolve_interpret(interpret)
+    key = ("mega_jit_single", bool(interpret), budget, max_kernels)
+    if key not in prog._pallas_cache:
+        prog._pallas_cache[key] = jax.jit(megakernel_single(
+            prog, interpret=interpret, budget=budget,
+            max_kernels=max_kernels))
+    return prog._pallas_cache[key]
+
+
+def megakernel_batched(prog: C.CompiledProgram, *,
+                       interpret: bool | None = None,
+                       budget: int | None = None,
+                       max_kernels: int | None = None):
+    """The megakernel program jitted and vmapped over a leading batch axis
+    (the `pallas` backend's batched serving step)."""
+    interpret = C.resolve_interpret(interpret)
+    key = ("mega_batched", bool(interpret), budget, max_kernels)
+    if key not in prog._pallas_cache:
+        prog._pallas_cache[key] = jax.jit(jax.vmap(megakernel_single(
+            prog, interpret=interpret, budget=budget,
+            max_kernels=max_kernels)))
+    return prog._pallas_cache[key]
+
+
+def run_megakernel(prog: C.CompiledProgram, inputs: dict,
+                   interpret: bool | None = None) -> dict:
+    """Convenience wrapper: one unbatched sample; numpy in, numpy out."""
+    import numpy as np
+    fn = jit_megakernel_single(prog, interpret=interpret)
+    out = fn({k: jnp.asarray(v) for k, v in inputs.items()})
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
+# -- invariants ---------------------------------------------------------------
+
+def _sub_jaxprs(v):
+    """Duck-typed sub-jaxpr discovery in eqn params (pjit bodies, cond
+    branches come as lists) — avoids version-fragile core imports."""
+    items = v if isinstance(v, (list, tuple)) else (v,)
+    for item in items:
+        inner = getattr(item, "jaxpr", item)  # ClosedJaxpr -> Jaxpr
+        if hasattr(inner, "eqns"):
+            yield inner
+
+
+def _count_pallas_eqns(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for v in eqn.params.values():
+            for sub in _sub_jaxprs(v):
+                n += _count_pallas_eqns(sub)
+    return n
+
+
+def count_pallas_calls(fn, sample_inputs: dict) -> int:
+    """Number of pallas_call equations in `fn`'s jaxpr (recursing into
+    sub-jaxprs) — the <= num_cores invariant check the tests gate on."""
+    jaxpr = jax.make_jaxpr(fn)(sample_inputs)
+    return _count_pallas_eqns(jaxpr.jaxpr)

@@ -24,6 +24,30 @@ from .gemm_int8 import requant_epilogue
 from .ref import _as_channel_mult
 
 
+def im2col_patches(x: jax.Array, kh: int, kw: int, stride: int = 1,
+                   padding: int = 0) -> jax.Array:
+    """(H, W, C) -> (oh*ow, kh*kw*C) patch matrix, value-level.
+
+    kh*kw shifted strided slices concatenated along the channel axis —
+    column order (di*kw + dj)*C + c, matching the (kh*kw*C, N) weight
+    layout of the conv kernels. Operates on values, so it works inside a
+    Pallas kernel body: the megakernel uses it to im2col scratchpad-
+    resident bands ("the actual duplication of memory is only carried out
+    in the scratchpad"), feeding one fused GEMM per conv instead of kh*kw
+    accumulation steps.
+    """
+    H, W, C = x.shape
+    oh = (H + 2 * padding - kh) // stride + 1
+    ow = (W + 2 * padding - kw) // stride + 1
+    xp = jnp.pad(x, ((padding, padding), (padding, padding), (0, 0)))
+    cols = [jax.lax.slice(
+        xp, (di, dj, 0),
+        (di + (oh - 1) * stride + 1, dj + (ow - 1) * stride + 1, C),
+        (stride, stride, 1)).reshape(oh * ow, C)
+        for di in range(kh) for dj in range(kw)]
+    return jnp.concatenate(cols, axis=1)
+
+
 def _make_kernel(kh: int, kw: int, stride: int, rows_t: int, ow: int,
                  requant: bool = False):
     def kernel(x_ref, w_ref, *refs):

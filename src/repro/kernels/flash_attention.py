@@ -84,17 +84,22 @@ def _make_kernel(bq: int, bk: int, skv: int, sq: int,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "causal", "window", "bq", "bk", "interpret"))
+    "causal", "window", "scale", "bq", "bk", "interpret"))
 def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                            *, causal: bool = True, window: int | None = None,
+                           scale: float | None = None,
                            bq: int = 128, bk: int = 128,
                            interpret: bool = False) -> jax.Array:
-    """q (B,Hq,Sq,D), k/v (B,Hkv,Skv,D) -> (B,Hq,Sq,D)."""
+    """q (B,Hq,Sq,D), k/v (B,Hkv,Skv,D) -> (B,Hq,Sq,D).
+
+    `scale` overrides the default 1/sqrt(D) logit scaling (matches the
+    `ref.flash_attention` oracle signature)."""
     B, Hq, Sq, D = q.shape
     _, Hkv, Skv, _ = k.shape
     assert Hq % Hkv == 0
     g = Hq // Hkv
-    scale = 1.0 / (D ** 0.5)
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
 
     bq_ = min(bq, Sq)
     bk_ = min(bk, Skv)

@@ -48,6 +48,44 @@ def _gemm_kernel(x_ref, w_ref, o_ref, acc_ref):
         o_ref[...] = acc_ref[...]
 
 
+# largest K for which <= K partial sums of int8 products (each <= 2^14)
+# stay exactly representable in float32 (K * 2^14 <= 2^24)
+_F32_EXACT_K = 1024
+
+
+def dot_i32_exact(x: jax.Array, w: jax.Array, *,
+                  via_f32: bool = False) -> jax.Array:
+    """int8-valued (M, K) @ (K, N) -> exact int32, value-level.
+
+    Usable inside Pallas kernel bodies (operates on values, not refs).
+    With ``via_f32=False`` this is the MXU int8 contraction
+    (``preferred_element_type=int32``) — the deployment path. With
+    ``via_f32=True`` the contraction runs in float32, chunked along K so
+    every partial sum stays exactly representable (products <= 2^14, at
+    most ``_F32_EXACT_K`` summands < 2^24): the same exactness argument as
+    ``repro.core.compiled.gemm_i32_exact``, but inside a kernel, where the
+    f32 dot hits the fast vector path under Pallas interpret mode on CPU.
+    """
+    dn = (((1,), (0,)), ((), ()))
+    if not via_f32:
+        return jax.lax.dot_general(x, w, dn,
+                                   preferred_element_type=jnp.int32)
+    K = x.shape[1]
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    if K <= _F32_EXACT_K:
+        return jax.lax.dot_general(
+            xf, wf, dn,
+            preferred_element_type=jnp.float32).astype(jnp.int32)
+    acc = jnp.zeros((x.shape[0], w.shape[1]), jnp.int32)
+    for k0 in range(0, K, _F32_EXACT_K):
+        k1 = min(K, k0 + _F32_EXACT_K)
+        acc = acc + jax.lax.dot_general(
+            xf[:, k0:k1], wf[k0:k1], dn,
+            preferred_element_type=jnp.float32).astype(jnp.int32)
+    return acc
+
+
 def requant_epilogue(acc: jax.Array, mult: jax.Array) -> jax.Array:
     """int32 accumulator tile -> int8, the repo's single requant definition.
 

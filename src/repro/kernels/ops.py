@@ -31,12 +31,19 @@ def set_default_backend(name: str) -> None:
     _DEFAULT_BACKEND = name
 
 
-def _resolve(backend: str | None) -> str:
+def resolve_backend(backend: str | None = None) -> str:
+    """The concrete dispatch target for `backend` (default: the module
+    default): "pallas", "interpret", or "ref". Model code uses this to
+    route whole-layer decisions (e.g. attention) through the same dispatch
+    the per-op wrappers use, instead of re-deriving platform checks."""
     b = backend or _DEFAULT_BACKEND
     if b == "auto":
         platform = jax.default_backend()
         return "pallas" if platform == "tpu" else "ref"
     return b
+
+
+_resolve = resolve_backend
 
 
 def gemm_int8(x, w, requant_mult=None, *, backend: str | None = None,
@@ -59,20 +66,22 @@ def conv2d_int8(x, w, requant_mult=None, *, kh, kw, stride=1, padding=0,
                               interpret=(b == "interpret"), **blocks)
 
 
-def flash_attention(q, k, v, *, causal=True, window=None,
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
                     backend: str | None = None, **blocks):
     b = _resolve(backend)
     if b == "ref":
-        return ref.flash_attention(q, k, v, causal=causal, window=window)
+        return ref.flash_attention(q, k, v, causal=causal, window=window,
+                                   scale=scale)
     return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  scale=scale,
                                   interpret=(b == "interpret"), **blocks)
 
 
-def ssm_scan(a, x, *, backend: str | None = None, **blocks):
+def ssm_scan(a, x, h0=None, *, backend: str | None = None, **blocks):
     b = _resolve(backend)
     if b == "ref":
-        return ref.ssm_scan(a, x)
-    return ssm_scan_pallas(a, x, interpret=(b == "interpret"), **blocks)
+        return ref.ssm_scan(a, x, h0)
+    return ssm_scan_pallas(a, x, h0, interpret=(b == "interpret"), **blocks)
 
 
 # -- batched wrappers (compiled-executor serving path) ------------------------

@@ -20,12 +20,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _make_kernel(ct: int):
-    def kernel(a_ref, x_ref, o_ref, h_ref):
+    def kernel(a_ref, x_ref, h0_ref, o_ref, h_ref):
         t = pl.program_id(1)
 
         @pl.when(t == 0)
         def _init():
-            h_ref[...] = jnp.zeros_like(h_ref)
+            h_ref[...] = h0_ref[0]
 
         a = a_ref[0]          # (ct, D)
         x = x_ref[0]
@@ -50,9 +50,13 @@ def _make_kernel(ct: int):
 
 
 @functools.partial(jax.jit, static_argnames=("ct", "interpret"))
-def ssm_scan_pallas(a: jax.Array, x: jax.Array, *, ct: int = 128,
+def ssm_scan_pallas(a: jax.Array, x: jax.Array,
+                    h0: jax.Array | None = None, *, ct: int = 128,
                     interpret: bool = False) -> jax.Array:
-    """a, x: (B, T, D) f32 -> y (B, T, D) f32; y_t = a_t*y_{t-1} + x_t."""
+    """a, x: (B, T, D) f32 -> y (B, T, D) f32; y_t = a_t*y_{t-1} + x_t.
+
+    `h0` (B, D) seeds the carry h_{-1} — the decode-step path, where the
+    recurrence resumes from cached state. None means h_{-1} = 0 (prefill)."""
     B, T, D = x.shape
     ct_ = min(ct, T)
     Tp = -(-T // ct_) * ct_
@@ -60,15 +64,18 @@ def ssm_scan_pallas(a: jax.Array, x: jax.Array, *, ct: int = 128,
     # padded steps produce h=0 without affecting earlier outputs)
     ap = jnp.pad(a.astype(jnp.float32), ((0, 0), (0, Tp - T), (0, 0)))
     xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, Tp - T), (0, 0)))
+    h0p = (jnp.zeros((B, 1, D), jnp.float32) if h0 is None
+           else h0.astype(jnp.float32).reshape(B, 1, D))
 
     out = pl.pallas_call(
         _make_kernel(ct_),
         grid=(B, Tp // ct_),
         in_specs=[pl.BlockSpec((1, ct_, D), lambda b, t: (b, t, 0)),
-                  pl.BlockSpec((1, ct_, D), lambda b, t: (b, t, 0))],
+                  pl.BlockSpec((1, ct_, D), lambda b, t: (b, t, 0)),
+                  pl.BlockSpec((1, 1, D), lambda b, t: (b, 0, 0))],
         out_specs=pl.BlockSpec((1, ct_, D), lambda b, t: (b, t, 0)),
         out_shape=jax.ShapeDtypeStruct((B, Tp, D), jnp.float32),
         scratch_shapes=[pltpu.VMEM((1, D), jnp.float32)],
         interpret=interpret,
-    )(ap, xp)
+    )(ap, xp, h0p)
     return out[:, :T]

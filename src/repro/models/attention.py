@@ -122,10 +122,16 @@ def attention_blockwise(q, k, v, *, causal=True, window=None,
 
 def attend(q, k, v, *, causal=True, window=None,
            blockwise_threshold=4096):
-    """Dispatch: Pallas on TPU, direct oracle for short seqs, blockwise else."""
+    """Dispatch through the kernel backend resolution
+    (`repro.kernels.ops.resolve_backend`): the Pallas flash-attention
+    kernel whenever a non-ref backend is resolved ("pallas" on TPU, or
+    "interpret"/"pallas" forced via `ops.set_default_backend`), the direct
+    oracle for short sequences on the ref path, blockwise jnp otherwise."""
     Sq, Skv = q.shape[2], k.shape[2]
-    if jax.default_backend() == "tpu":
-        return kops.flash_attention(q, k, v, causal=causal, window=window)
+    backend = kops.resolve_backend()
+    if backend != "ref":
+        return kops.flash_attention(q, k, v, causal=causal, window=window,
+                                    backend=backend)
     if max(Sq, Skv) <= blockwise_threshold:
         from ..kernels import ref
         return ref.flash_attention(q, k, v, causal=causal, window=window)

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from .config import ModelConfig
 from .layers import normal_init
-from ..kernels import ref as kref
+from ..kernels import ops as kops
 
 
 def ssm_init(key, cfg: ModelConfig, dtype):
@@ -86,7 +86,9 @@ def ssm_apply(p, x, cfg: ModelConfig, state=None, conv_cache=None):
         # decode / short-sequence path: explicit recurrence on the
         # flattened (channel, state) pairs
         h0 = None if state is None else state.reshape(B, Din * N)
-        ys = kref.ssm_scan(a_cn, x_cn, h0=h0)
+        # backend-dispatched: the Pallas chunked-scan kernel (carry seeded
+        # from the decode state via its h0 operand) on TPU, ref elsewhere
+        ys = kops.ssm_scan(a_cn, x_cn, h0)
         h = ys.reshape(B, S, Din, N)
         y = jnp.einsum("bscn,bsn->bsc", h, Cmat) + p["d_skip"] * xf
         new_state = h[:, -1]                              # (B, Din, N)

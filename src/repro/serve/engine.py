@@ -57,6 +57,7 @@ class BatchedInferenceEngine:
     def __init__(self, graph: Graph, params: dict,
                  hw: HardwareModel = TPU_V5E,
                  num_cores: int | None = None, backend: str = "jax",
+                 backend_options=None,
                  deployment=None,
                  fault_hook=None):
         self.graph = graph
@@ -65,8 +66,15 @@ class BatchedInferenceEngine:
         if deployment is None:
             deployment = compile_deployment(graph, hw, backend=backend,
                                             params=params,
-                                            num_cores=num_cores)
+                                            num_cores=num_cores,
+                                            backend_options=backend_options)
+        elif backend_options is not None:
+            # precompiled artifact: re-key with the requested options
+            # (validated against the backend's capabilities at swap time)
+            deployment = deployment.with_backend(backend,
+                                                 options=backend_options)
         self.deployment = deployment
+        self.options = deployment.options
         self.program = deployment.program
         self._fn = deployment.runner(batched=True, backend=backend)
         # chaos-run injection point for standalone engines (inside a
@@ -76,11 +84,12 @@ class BatchedInferenceEngine:
         self.metrics = {"batches": 0, "samples": 0}
 
     @classmethod
-    def from_deployment(cls, deployment, backend: str | None = None
-                        ) -> "BatchedInferenceEngine":
+    def from_deployment(cls, deployment, backend: str | None = None,
+                        backend_options=None) -> "BatchedInferenceEngine":
         """Serve a precompiled (e.g. `Deployment.load`-ed) artifact."""
         return cls(deployment.graph, None,
                    backend=backend or deployment.backend,
+                   backend_options=backend_options,
                    deployment=deployment)
 
     def infer(self, batch: dict[str, np.ndarray] | np.ndarray

@@ -133,7 +133,8 @@ def prepare_mode(server, mode: Mode) -> StagedMode:
         st.deployment = compile_deployment(
             st.spec.graph, server.machine, backend=server.backend,
             params=st.params, num_cores=server.num_cores,
-            arbitration=server.arbitration)
+            arbitration=server.arbitration,
+            backend_options=server.backend_options)
         st.runner = st.deployment.runner(batched=True,
                                          backend=server.backend)
     return StagedMode(mode=mode, nets=nets, report=report, compiled=compiled)

@@ -320,6 +320,11 @@ class Server:
       backend        any registered backend name ("numpy", "jax", "pallas",
                      third-party) — networks with a compiled lowering get a
                      Deployment + batched runner on it;
+      backend_options
+                     a `repro.BackendOptions` with typed execution knobs
+                     (interpret mode, megakernel on/off, tile overrides),
+                     validated against the backend's capabilities up front
+                     and persisted through `save`/`load`;
       queue_capacity / queue_policy
                      bounded per-network request queues ("reject" |
                      "drop-oldest");
@@ -331,15 +336,19 @@ class Server:
     """
 
     def __init__(self, machine: HardwareModel, *, backend: str = "jax",
+                 backend_options=None,
                  num_cores: int | None = None, arbitration: str = "static",
                  queue_capacity: int = 64, queue_policy: str = "reject",
                  speed_ratio: float | None = None,
                  slack_factor: float = 1.5,
                  overload: OverloadPolicy | None = None):
-        from ..compiler import get_backend
-        get_backend(backend)                 # fail fast on unknown backend
+        from ..compiler import BackendOptions, get_backend
+        backend_options = backend_options or BackendOptions()
+        # fail fast on unknown backend / unsupported options
+        get_backend(backend).validate_options(backend_options)
         self.machine = machine
         self.backend = backend
+        self.backend_options = backend_options
         self.num_cores = num_cores
         self.arbitration = arbitration
         self.queue_capacity = queue_capacity
@@ -574,7 +583,8 @@ class Server:
         st.deployment = compile_deployment(
             st.spec.graph, self.machine, backend=self.backend,
             params=st.params, num_cores=self.num_cores,
-            arbitration=self.arbitration)
+            arbitration=self.arbitration,
+            backend_options=self.backend_options)
         st.runner = st.deployment.runner(batched=True, backend=self.backend)
 
     def attach(self, name: str, step_fn: Callable) -> None:
@@ -1235,7 +1245,8 @@ class Server:
             dep = compile_deployment(graph, self.machine, backend=backend,
                                      params=params,
                                      num_cores=self.num_cores,
-                                     arbitration=self.arbitration)
+                                     arbitration=self.arbitration,
+                                     backend_options=self.backend_options)
             eng = BatchedInferenceEngine.from_deployment(dep)
             st.step_fn = (lambda e=eng, x=inp: e.infer(x))
             st.autorun = True
@@ -1257,7 +1268,9 @@ class Server:
         deployments = {n: st.deployment for n, st in self._nets.items()
                        if st.deployment is not None}
         extra = {
-            "server": {"backend": self.backend, "num_cores": self.num_cores,
+            "server": {"backend": self.backend,
+                       "backend_options": self.backend_options.to_manifest(),
+                       "num_cores": self.num_cores,
                        "arbitration": self.arbitration,
                        "queue_capacity": self.queue_capacity,
                        "queue_policy": self.queue_policy,
@@ -1308,7 +1321,10 @@ class Server:
             raise ArtifactError(
                 f"{dirpath}: serving bundle was saved for machine "
                 f"{want_fp}, refusing {hw.name} ({hw.fingerprint()})")
+        from ..compiler import BackendOptions
         srv = cls(hw, backend=cfg.get("backend", "jax"),
+                  backend_options=BackendOptions.from_manifest(
+                      cfg.get("backend_options")),
                   num_cores=cfg.get("num_cores"),
                   arbitration=cfg.get("arbitration", "static"),
                   queue_capacity=cfg.get("queue_capacity", 64),

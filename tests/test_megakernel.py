@@ -1,0 +1,296 @@
+"""The fused per-core megakernel backend and the capability-aware backend
+API (PR 8).
+
+Megakernel contract (repro/core/megakernel.py): walking the pallas plan,
+packing steps into scratchpad-budgeted segments, and emitting at most
+`num_cores` grid-scheduled fused `pallas_call`s per program must stay
+bit-exact against `reference_forward` on every CNN preset — single sample
+and vmapped batch — while the per-op path (megakernel=False) keeps working.
+
+Backend API contract (repro/compiler/backends.py): `BackendOptions` are
+validated against `BackendCapabilities` at compile/swap time (not on first
+run), persisted through `Deployment.save`/`load`, and legacy
+single-argument `register_backend` factories keep working via the
+deprecation shim.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+import repro
+from repro.compiler import (BackendError, BackendOptions, get_backend,
+                            register_backend, unregister_backend)
+from repro.core import (analyze, cnn, init_params, lower_program,
+                        reference_forward)
+from repro.core import megakernel as MK
+from repro.hw import scaled_paper_machine
+
+PRESETS = {
+    "small_cnn": (lambda: cnn.small_cnn(), (32, 32, 3)),
+    "resnet50": (lambda: cnn.resnet50(h=32, w=32, width=0.25,
+                                      blocks=(1, 1, 1, 1), num_classes=16),
+                 (32, 32, 3)),
+    "yolov5s": (lambda: cnn.yolov5s_backbone(h=64, w=64, width=0.25),
+                (64, 64, 3)),
+}
+
+
+def _compiled(preset, cores=4, seed=1):
+    g, shape = PRESETS[preset][0](), PRESETS[preset][1]
+    hw = scaled_paper_machine(cores)
+    rep, sched, subtasks, mapping = analyze(g, hw, num_cores=cores)
+    params = init_params(g, seed=seed)
+    prog = lower_program(g, params, subtasks, mapping, sched, hw=hw)
+    return g, shape, params, prog
+
+
+# -- megakernel numerics ------------------------------------------------------
+
+@pytest.mark.parametrize("preset", sorted(PRESETS))
+def test_megakernel_bit_exact(preset):
+    """The fused megakernel == whole-graph oracle on every CNN preset (the
+    acceptance bar: fusion must not change a single bit)."""
+    g, shape, params, prog = _compiled(preset)
+    x = np.random.default_rng(2).integers(-64, 64, size=shape).astype(np.int8)
+    ref = reference_forward(g, params, {"input": x})
+    out = MK.run_megakernel(prog, {"input": x}, interpret=True)
+    for t in g.outputs:
+        assert np.array_equal(ref[t], out[t])
+
+
+@pytest.mark.parametrize("preset", sorted(PRESETS))
+def test_megakernel_call_count_invariant(preset):
+    """<= num_cores pallas_call equations per program, verified on the
+    actual jaxpr (not the plan): the paper's one-kernel-per-core model."""
+    g, shape, params, prog = _compiled(preset)
+    import jax.numpy as jnp
+    x = jnp.zeros(shape, jnp.int8)
+    fn = MK.megakernel_single(prog, interpret=True)
+    n = MK.count_pallas_calls(fn, {"input": x})
+    assert 1 <= n <= prog.num_cores
+    # and the plan agrees with the emission
+    segments = MK.plan_segments(prog)
+    assert n == sum(s.emits_call for s in segments)
+
+
+def test_megakernel_fuses_below_per_op():
+    """The whole point: far fewer kernel launches than one-call-per-op."""
+    g, shape, params, prog = _compiled("resnet50")
+    import jax.numpy as jnp
+    from repro.core import compiled as C
+    x = jnp.zeros(shape, jnp.int8)
+    n_mega = MK.count_pallas_calls(
+        MK.megakernel_single(prog, interpret=True), {"input": x})
+    n_perop = MK.count_pallas_calls(
+        C.pallas_single(prog, interpret=True), {"input": x})
+    assert n_mega <= prog.num_cores < n_perop
+
+
+def test_megakernel_batched_vmap():
+    g, shape, params, prog = _compiled("small_cnn")
+    import jax.numpy as jnp
+    B = 3
+    xb = np.random.default_rng(5).integers(
+        -64, 64, size=(B,) + shape).astype(np.int8)
+    fn = MK.megakernel_batched(prog, interpret=True)
+    out = fn({"input": jnp.asarray(xb)})
+    for b in range(B):
+        ref = reference_forward(g, params, {"input": xb[b]})
+        for t in g.outputs:
+            assert np.array_equal(ref[t], np.asarray(out[t])[b])
+
+
+def test_megakernel_budget_and_cap_options():
+    """scratchpad_budget shapes the pack (smaller budget -> more segments,
+    still <= cap); max_kernels=1 forces everything into one launch."""
+    g, shape, params, prog = _compiled("resnet50")
+    default = MK.plan_segments(prog)
+    squeezed = MK.plan_segments(prog, budget=64 * 1024)
+    assert sum(s.emits_call for s in squeezed) <= prog.num_cores
+    assert (sum(s.emits_call for s in squeezed)
+            >= sum(s.emits_call for s in default))
+    one = MK.plan_segments(prog, max_kernels=1)
+    assert sum(s.emits_call for s in one) <= 1
+    # numerics hold under both overrides
+    x = np.random.default_rng(2).integers(-64, 64, size=shape).astype(np.int8)
+    ref = reference_forward(g, params, {"input": x})
+    import jax.numpy as jnp
+    for kw in (dict(budget=64 * 1024), dict(max_kernels=1)):
+        out = MK.megakernel_single(prog, interpret=True, **kw)(
+            {"input": jnp.asarray(x)})
+        for t in g.outputs:
+            assert np.array_equal(ref[t], np.asarray(out[t]))
+
+
+def test_segment_cores_round_robin():
+    segments = [s for s in MK.plan_segments(_compiled("resnet50")[3])
+                if s.emits_call]
+    assert [s.core for s in segments] == [i % 4 for i in range(len(segments))]
+
+
+# -- backend options / capabilities -------------------------------------------
+
+def _deploy(preset="small_cnn", backend="pallas", **kw):
+    g, shape = PRESETS[preset][0](), PRESETS[preset][1]
+    hw = scaled_paper_machine(4)
+    params = init_params(g, seed=1)
+    dep = repro.compile(g, hw, backend=backend, params=params, **kw)
+    return g, shape, params, dep
+
+
+def test_backend_options_validated_at_compile_time():
+    with pytest.raises(BackendError, match="does not support"):
+        _deploy(backend="jax",
+                backend_options=BackendOptions(megakernel=True))
+
+
+def test_interpret_false_requires_tpu():
+    import jax
+    if jax.default_backend() == "tpu":
+        pytest.skip("native lowering legal here")
+    with pytest.raises(BackendError, match="requires"):
+        _deploy(backend="pallas",
+                backend_options=BackendOptions(interpret=False))
+
+
+def test_with_backend_validates_at_swap_time():
+    """An invalid (backend, options) pair raises at `with_backend`, before
+    the view ever reaches a serving loop (the PR-8 fix: it used to blow up
+    on the first run)."""
+    g, shape, params, dep = _deploy(
+        backend="pallas", backend_options=BackendOptions(interpret=True))
+    with pytest.raises(BackendError):
+        dep.with_backend("nonexistent-backend")
+    with pytest.raises(BackendError):
+        dep.with_backend("numpy")        # numpy supports no options
+    # a valid swap carries (or replaces) the options
+    view = dep.with_backend("jax", options=BackendOptions())
+    assert view.backend == "jax" and view.options == BackendOptions()
+    x = np.random.default_rng(2).integers(-64, 64, size=shape).astype(np.int8)
+    ref = reference_forward(g, params, {"input": x})
+    for d in (dep, view):
+        out = d.run({"input": x})
+        for t in g.outputs:
+            assert np.array_equal(ref[t], out[t])
+
+
+def test_pallas_megakernel_off_restores_per_op_path():
+    g, shape, params, dep = _deploy(
+        backend="pallas",
+        backend_options=BackendOptions(interpret=True, megakernel=False))
+    x = np.random.default_rng(2).integers(-64, 64, size=shape).astype(np.int8)
+    ref = reference_forward(g, params, {"input": x})
+    out = dep.run({"input": x})
+    for t in g.outputs:
+        assert np.array_equal(ref[t], out[t])
+
+
+def test_options_persist_through_save_load(tmp_path):
+    opts = BackendOptions(interpret=True, max_kernels=2)
+    g, shape, params, dep = _deploy(backend="pallas", backend_options=opts)
+    p = str(tmp_path / "net.rtdep")
+    dep.save(p)
+    dep2 = repro.Deployment.load(p, machine=dep.machine)
+    assert dep2.backend == "pallas" and dep2.options == opts
+    x = np.random.default_rng(2).integers(-64, 64, size=shape).astype(np.int8)
+    ref = reference_forward(g, params, {"input": x})
+    out = dep2.run({"input": x})
+    for t in g.outputs:
+        assert np.array_equal(ref[t], out[t])
+
+
+def test_options_manifest_round_trip_lenient():
+    opts = BackendOptions(interpret=True, scratchpad_budget=1 << 16)
+    assert BackendOptions.from_manifest(opts.to_manifest()) == opts
+    # unknown keys from newer artifacts are ignored, absent ones default
+    assert (BackendOptions.from_manifest({"interpret": True, "future": 1})
+            == BackendOptions(interpret=True))
+    assert BackendOptions.from_manifest(None) == BackendOptions()
+    assert BackendOptions().to_manifest() == {}
+
+
+def test_capabilities_of_builtins():
+    assert get_backend("pallas").capabilities.requires_device == "tpu"
+    assert get_backend("jax").capabilities.supports_batched_native
+    assert get_backend("jax").capabilities.supports_decode
+    assert not get_backend("numpy").capabilities.supports_batched_native
+    assert get_backend("numpy").capabilities.supported_options == frozenset()
+
+
+def test_legacy_factory_deprecation_shim():
+    """Old-style `register_backend(name, single=lambda prog: ...)` still
+    works, with a DeprecationWarning at registration."""
+    def legacy(prog):
+        def run(inputs):
+            from repro.core import run_numpy
+            vals = run_numpy(prog, inputs)
+            return {t: vals[t] for t in prog.graph.outputs}
+        return run
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        register_backend("legacy-test", single=legacy)
+    try:
+        assert any(issubclass(x.category, DeprecationWarning) for x in w)
+        g, shape, params, dep = _deploy(backend="legacy-test")
+        x = np.random.default_rng(2).integers(
+            -64, 64, size=shape).astype(np.int8)
+        ref = reference_forward(g, params, {"input": x})
+        out = dep.run({"input": x})
+        for t in g.outputs:
+            assert np.array_equal(ref[t], out[t])
+    finally:
+        unregister_backend("legacy-test")
+
+
+def test_engine_accepts_backend_options():
+    from repro.serve.engine import BatchedInferenceEngine
+    g, shape = PRESETS["small_cnn"][0](), PRESETS["small_cnn"][1]
+    params = init_params(g, seed=1)
+    eng = BatchedInferenceEngine(
+        g, params, hw=scaled_paper_machine(4), backend="pallas",
+        backend_options=BackendOptions(interpret=True))
+    assert eng.options.interpret is True
+    xb = np.random.default_rng(7).integers(
+        -64, 64, size=(2,) + shape).astype(np.int8)
+    out = eng.infer(xb)
+    for b in range(2):
+        ref = reference_forward(g, params, {"input": xb[b]})
+        for t in g.outputs:
+            assert np.array_equal(ref[t], out[t][b])
+
+
+def test_server_persists_backend_options(tmp_path):
+    from repro.serve.runtime import Server
+    hw = scaled_paper_machine(4)
+    opts = BackendOptions(interpret=True)
+    srv = Server(hw, backend="pallas", backend_options=opts)
+    g = cnn.small_cnn()
+    srv.register("cnn", g, 0.05, 0.05, params=init_params(g, seed=1))
+    assert srv._nets["cnn"].deployment.options == opts
+    srv.save(str(tmp_path))
+    srv2 = Server.load(str(tmp_path))
+    assert srv2.backend == "pallas" and srv2.backend_options == opts
+    with pytest.raises(BackendError):
+        Server(hw, backend="numpy", backend_options=opts)
+
+
+# -- real-device path ---------------------------------------------------------
+
+@pytest.mark.tpu
+def test_megakernel_native_mosaic_smoke():
+    """Non-interpret smoke on a real TPU: the same megakernel program
+    lowers through Mosaic (interpret=False) and stays bit-exact. Skipped
+    on CPU CI (run with `pytest -m tpu` on a TPU host); the interpret-mode
+    tests above cover the numerics everywhere else."""
+    import jax
+    if jax.default_backend() != "tpu":
+        pytest.skip("needs a real TPU device")
+    g, shape, params, prog = _compiled("small_cnn")
+    x = np.random.default_rng(2).integers(-64, 64, size=shape).astype(np.int8)
+    ref = reference_forward(g, params, {"input": x})
+    out = MK.run_megakernel(prog, {"input": x}, interpret=False)
+    for t in g.outputs:
+        assert np.array_equal(ref[t], out[t])

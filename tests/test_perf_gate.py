@@ -13,24 +13,29 @@ SERVE_BASELINE = pathlib.Path(__file__).parent.parent / "benchmarks" / \
     "baseline_serve.json"
 
 
-def _row(preset, np_s=3.0, jax_s=3.0):
+def _row(preset, np_s=3.0, jax_s=3.0, pallas_s=3.0):
     return {"preset": preset, "speedup_np_vs_seed": np_s,
-            "speedup_jax_b8_vs_seed": jax_s}
+            "speedup_jax_b8_vs_seed": jax_s,
+            "speedup_pallas_vs_seed": pallas_s}
 
 
 def test_gate_passes_at_and_above_floor():
-    base = {"presets": [_row("a", 2.0, 4.0)]}
-    ok, rows = check({"presets": [_row("a", 1.4, 2.8)]}, base, 0.7)
+    base = {"presets": [_row("a", 2.0, 4.0, 6.0)]}
+    ok, rows = check({"presets": [_row("a", 1.4, 2.8, 4.2)]}, base, 0.7)
     assert ok and len(rows) == len(GATED_KEYS)
-    ok, _ = check({"presets": [_row("a", 10.0, 10.0)]}, base, 0.7)
+    ok, _ = check({"presets": [_row("a", 10.0, 10.0, 10.0)]}, base, 0.7)
     assert ok
 
 
 def test_gate_fails_below_floor_and_on_missing_preset():
-    base = {"presets": [_row("a", 2.0, 4.0)]}
-    ok, rows = check({"presets": [_row("a", 1.39, 4.0)]}, base, 0.7)
+    base = {"presets": [_row("a", 2.0, 4.0, 6.0)]}
+    ok, rows = check({"presets": [_row("a", 1.39, 4.0, 6.0)]}, base, 0.7)
     assert not ok
-    assert [r[-1] for r in rows] == [False, True]
+    assert [r[-1] for r in rows] == [False, True, True]
+    # a pallas-only regression (the newly gated key) also trips the gate
+    ok, rows = check({"presets": [_row("a", 2.0, 4.0, 4.1)]}, base, 0.7)
+    assert not ok
+    assert [r[-1] for r in rows] == [True, True, False]
     ok, rows = check({"presets": []}, base, 0.7)
     assert not ok and all(r[3] is None for r in rows)
 

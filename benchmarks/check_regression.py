@@ -58,9 +58,15 @@ def check(current: dict, baseline: dict, threshold: float = 0.7):
         preset = base_row["preset"]
         cur_row = cur_by_preset.get(preset)
         for key in GATED_KEYS:
+            if key not in base_row:
+                # a gated key absent from the committed baseline is a
+                # broken baseline, not a vacuous pass: fail it by name
+                rows.append((preset, key, None, None, None, False))
+                ok = False
+                continue
             base = float(base_row[key])
             floor = threshold * base
-            if cur_row is None:
+            if cur_row is None or key not in cur_row:
                 rows.append((preset, key, base, None, floor, False))
                 ok = False
                 continue
@@ -74,12 +80,18 @@ def check(current: dict, baseline: dict, threshold: float = 0.7):
 def check_serve(current: dict, baseline: dict, threshold: float = 0.7):
     """Serve-loop gate over the "continuous" stats dict; same row shape as
     `check` with preset "continuous"."""
-    base_stats = baseline.get("continuous", {})
+    base_stats = baseline.get("continuous")
+    if base_stats is None:
+        return True, []          # no committed serve baseline: nothing gated
     cur_stats = current.get("continuous", {})
     rows = []
     ok = True
     for key in SERVE_GATED_KEYS:
         if key not in base_stats:
+            # same policy as `check`: a baseline that lost a gated key
+            # must fail loudly, not silently stop gating that metric
+            rows.append(("continuous", key, None, None, None, False))
+            ok = False
             continue
         base = float(base_stats[key])
         floor = threshold * base
@@ -134,9 +146,11 @@ def check_overload(current: dict):
 
 def _print_rows(rows) -> None:
     for preset, key, base, cur, floor, row_ok in rows:
+        base_s = " MISSING" if base is None else f"{base:8.1f}x"
+        floor_s = " MISSING" if floor is None else f"{floor:7.1f}x"
         cur_s = "MISSING" if cur is None else f"{cur:8.1f}x"
         print(
-            f"{preset:<20}{key:<26}{base:8.1f}x{floor:7.1f}x{cur_s:>9}  "
+            f"{preset:<20}{key:<26}{base_s}{floor_s}{cur_s:>9}  "
             f"{'ok' if row_ok else 'REGRESSION'}"
         )
 
@@ -168,11 +182,20 @@ def main(argv=None) -> int:
     if os.path.exists(args.serve_current):
         with open(args.serve_current) as f:
             serve_current = json.load(f)
-    if serve_current is not None and os.path.exists(args.serve_baseline):
+    if os.path.exists(args.serve_baseline):
         with open(args.serve_baseline) as f:
             serve_baseline = json.load(f)
+        if serve_current is None:
+            # a committed serve baseline gates the serve loop; a missing
+            # candidate file means the benchmark silently did not run --
+            # fail every gated serve metric instead of skipping the gate
+            print(
+                f"error: {args.serve_current} not found but "
+                f"{args.serve_baseline} gates it",
+                file=sys.stderr,
+            )
         serve_ok, serve_rows = check_serve(
-            serve_current, serve_baseline, args.threshold
+            serve_current or {}, serve_baseline, args.threshold
         )
         ok = ok and serve_ok
         rows = rows + serve_rows

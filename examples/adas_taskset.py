@@ -29,7 +29,6 @@ whole taskset exactly at a hyperperiod boundary.
 """
 
 import os
-import tempfile
 
 import numpy as np
 
@@ -118,18 +117,19 @@ def main():
           f"deadline {'MET' if r.deadline_met else 'MISSED'}")
     print(srv.monitor.summary())
 
-    # a whole serving configuration is one AOT artifact bundle
-    with tempfile.TemporaryDirectory() as d:
-        path = srv.save(os.path.join(d, "adas.bundle"))
-        srv2 = Server.load(path)
-        t1 = srv.submit("lane_keeper", x)
-        t2 = srv2.submit("lane_keeper", x)
-        srv.run(hyperperiods=1)
-        srv2.run(hyperperiods=1)
-        o1, o2 = t1.result().output, t2.result().output
-        assert all(np.array_equal(o1[k], o2[k]) for k in o1)
-        print("\nServer.save/load round-trip: bit-exact serving "
-              f"({os.path.basename(path)})")
+    # a whole serving configuration is one AOT artifact bundle; kept
+    # under out/ so `python -m repro.analysis` can lint it afterwards
+    os.makedirs("out", exist_ok=True)
+    path = srv.save(os.path.join("out", "adas.bundle"))
+    srv2 = Server.load(path)
+    t1 = srv.submit("lane_keeper", x)
+    t2 = srv2.submit("lane_keeper", x)
+    srv.run(hyperperiods=1)
+    srv2.run(hyperperiods=1)
+    o1, o2 = t1.result().output, t2.result().output
+    assert all(np.array_equal(o1[k], o2[k]) for k in o1)
+    print("\nServer.save/load round-trip: bit-exact serving "
+          f"({os.path.basename(path)})")
 
     degraded_ops_demo(hw)
 

@@ -11,7 +11,6 @@ the deployment through its serialized artifact.
 """
 
 import os
-import tempfile
 
 import numpy as np
 
@@ -73,7 +72,10 @@ def main():
     print("=" * 72)
     print("3. Ahead-of-time artifact: save -> load -> identical deployment")
     print("=" * 72)
-    path = os.path.join(tempfile.mkdtemp(), "resnet_reduced.rtdep")
+    # persisted under out/ so `python -m repro.analysis` can lint it (CI
+    # runs the sanitizer over every artifact the examples produce)
+    os.makedirs("out", exist_ok=True)
+    path = os.path.join("out", "resnet_reduced.rtdep")
     deploy.save(path)
     reloaded = repro.Deployment.load(path, machine=PAPER_RISCV, graph=g2)
     out = reloaded.run(x)

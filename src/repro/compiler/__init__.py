@@ -25,7 +25,8 @@ from .deployment import (ARTIFACT_FORMAT, BUNDLE_FORMAT, ArtifactError,
                          save_bundle)
 from .pipeline import (DeadlineError, LowerPass, MapPass, PartitionPass,
                        Pass, PassContext, PassManager, PipelineError,
-                       QuantizePass, SchedulePass, StageRecord, WCETPass,
+                       QuantizePass, SchedulePass, StageRecord,
+                       VerificationError, VerifyPass, WCETPass,
                        default_passes)
 
 __all__ = [
@@ -37,5 +38,6 @@ __all__ = [
     "get_backend", "list_backends",
     "Pass", "PassManager", "PassContext", "StageRecord", "default_passes",
     "QuantizePass", "PartitionPass", "MapPass", "SchedulePass", "WCETPass",
-    "LowerPass", "PipelineError", "DeadlineError",
+    "LowerPass", "VerifyPass", "PipelineError", "DeadlineError",
+    "VerificationError",
 ]

@@ -47,17 +47,28 @@ def compile(graph_or_taskset, machine: HardwareModel, *,   # noqa: A001
             params: dict | None = None, num_cores: int | None = None,
             arbitration: str = "static", validate: bool = True,
             use_cache: bool = True,
-            backend_options: BackendOptions | None = None):
+            backend_options: BackendOptions | None = None,
+            verify: bool = True, strict: bool = False,
+            suppress: tuple = ()):
     """Compile a graph (or taskset) for `machine` into a deployment.
 
     Single network: runs the staged pass pipeline (quantize -> partition ->
-    map -> schedule -> wcet -> lower) and returns a `Deployment`. `params`
+    map -> schedule -> wcet -> lower -> verify) and returns a
+    `Deployment`. `params`
     may be a complete weights dict, a partial one (missing entries are
     synthesized), or None. `deadline` (seconds) makes compilation fail with
     `DeadlineError` if the WCET bound exceeds it. `backend_options` (a
     `BackendOptions`) carries typed execution knobs — interpret mode,
     megakernel on/off, tile overrides — validated here against the
     backend's capabilities and persisted with the deployment artifact.
+
+    `verify` runs the schedule sanitizer (`repro.analysis`) as the final
+    pass: any unsuppressed error-severity diagnostic — a DMA-window
+    overlap, a scratchpad overrun, an unsound WCET bound — fails the
+    compile with `VerificationError`; `strict=True` fails on warnings
+    too. `suppress` waives specific findings ("RULE" or "RULE@scope",
+    see docs/analysis.md); the directives are persisted on the artifact
+    so `Deployment.save`/`load` honor the same waivers.
 
     Taskset (a sequence of `NetworkSpec`): runs the hyperperiod analysis
     and compiles an executable `Deployment` for every member network whose
@@ -73,7 +84,8 @@ def compile(graph_or_taskset, machine: HardwareModel, *,   # noqa: A001
                               deadline=deadline, params=params,
                               num_cores=num_cores, arbitration=arbitration,
                               validate=validate, use_cache=use_cache,
-                              options=options)
+                              options=options, verify=verify, strict=strict,
+                              suppress=tuple(suppress))
     if (isinstance(graph_or_taskset, Sequence)
             and graph_or_taskset
             and all(isinstance(s, NetworkSpec) for s in graph_or_taskset)):
@@ -85,7 +97,8 @@ def compile(graph_or_taskset, machine: HardwareModel, *,   # noqa: A001
                                 backend=backend, params_by_net=params or {},
                                 num_cores=num_cores, arbitration=arbitration,
                                 validate=validate, use_cache=use_cache,
-                                options=options)
+                                options=options, verify=verify,
+                                strict=strict, suppress=tuple(suppress))
     raise TypeError(
         "repro.compile expects a Graph or a non-empty sequence of "
         f"NetworkSpec, got {type(graph_or_taskset).__name__}")
@@ -95,12 +108,14 @@ def _compile_graph(graph: Graph, machine: HardwareModel, *, backend: str,
                    deadline: float | None, params: dict | None,
                    num_cores: int | None, arbitration: str, validate: bool,
                    use_cache: bool,
-                   options: BackendOptions | None = None) -> Deployment:
+                   options: BackendOptions | None = None,
+                   verify: bool = True, strict: bool = False,
+                   suppress: tuple = ()) -> Deployment:
     options = options or BackendOptions()
     params_key = None if params is None else id(params)
     key = (graph_signature(graph), machine.fingerprint(), backend,
            options.cache_key(), num_cores, arbitration, bool(validate),
-           params_key)
+           params_key, bool(verify), bool(strict), tuple(suppress))
     if use_cache:
         hit = _DEPLOYMENT_CACHE.get(key)
         if hit is not None and hit[0] is params:
@@ -108,15 +123,20 @@ def _compile_graph(graph: Graph, machine: HardwareModel, *, backend: str,
             _check_deadline(hit[1], deadline)
             return hit[1]
 
+    passes = default_passes()
+    if not verify:
+        passes = [p for p in passes if getattr(p, "name", "") != "verify"]
     ctx = PassContext(graph=graph, hw=machine,
                       params=dict(params) if params else {},
                       num_cores=num_cores, arbitration=arbitration,
-                      deadline=deadline, validate=validate)
-    PassManager(default_passes()).run(ctx)
+                      deadline=deadline, validate=validate, strict=strict,
+                      suppress=tuple(suppress), backend_options=options)
+    PassManager(passes).run(ctx)
     dep = Deployment(program=ctx.program, schedule=ctx.schedule,
                      report=ctx.report, machine=machine, backend=backend,
                      options=options, stages=ctx.stages,
-                     artifacts=ctx.artifacts)
+                     artifacts=ctx.artifacts,
+                     suppressions=tuple(suppress))
     if use_cache:
         _DEPLOYMENT_CACHE[key] = (params, dep)
         while len(_DEPLOYMENT_CACHE) > _DEPLOYMENT_CACHE_CAP:
@@ -135,8 +155,9 @@ def _compile_taskset(specs: list[NetworkSpec], machine: HardwareModel, *,
                      backend: str, params_by_net: dict,
                      num_cores: int | None, arbitration: str,
                      validate: bool, use_cache: bool,
-                     options: BackendOptions | None = None
-                     ) -> TasksetDeployment:
+                     options: BackendOptions | None = None,
+                     verify: bool = True, strict: bool = False,
+                     suppress: tuple = ()) -> TasksetDeployment:
     options = options or BackendOptions()
     report, compiled = analyze_taskset(specs, machine, num_cores,
                                        arbitration=arbitration,
@@ -149,10 +170,24 @@ def _compile_taskset(specs: list[NetworkSpec], machine: HardwareModel, *,
             spec.graph, machine, backend=backend, deadline=None,
             params=params_by_net.get(spec.name), num_cores=num_cores,
             arbitration=arbitration, validate=validate, use_cache=use_cache,
-            options=options)
-    return TasksetDeployment(report=report, taskset=compiled,
+            options=options, verify=verify, strict=strict,
+            suppress=suppress)
+    tdep = TasksetDeployment(report=report, taskset=compiled,
                              deployments=deployments, machine=machine,
-                             backend=backend, options=options)
+                             backend=backend, options=options,
+                             suppressions=tuple(suppress))
+    if verify:
+        from ..analysis import analyze_taskset_deployment
+        from .pipeline import VerificationError
+        analysis = analyze_taskset_deployment(tdep)
+        tdep.analysis = analysis
+        blocking = analysis.unsuppressed() if strict else analysis.errors
+        if blocking:
+            shown = "\n".join("  " + d.row() for d in blocking[:10])
+            raise VerificationError(
+                f"taskset on {machine.name}: schedule sanitizer found "
+                f"{len(blocking)} blocking diagnostic(s):\n{shown}")
+    return tdep
 
 
 def clear_deployment_cache() -> None:

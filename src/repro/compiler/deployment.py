@@ -66,6 +66,9 @@ class Deployment:
         default_factory=BackendOptions)
     stages: list[StageRecord] = dataclasses.field(default_factory=list)
     artifacts: dict = dataclasses.field(default_factory=dict)
+    # analyzer waivers ("RULE" / "RULE@scope"); persisted with the
+    # artifact so save/load gate against the same set the compile did
+    suppressions: tuple = ()
     _runners: dict = dataclasses.field(default_factory=dict, repr=False,
                                        compare=False)
 
@@ -149,8 +152,23 @@ class Deployment:
             "wcet_total_s": self.report.wcet_total_s,
         }
 
-    def save(self, path: str) -> str:
-        """Write the artifact (ZIP manifest + payload). Returns `path`."""
+    def save(self, path: str, *, force: bool = False) -> str:
+        """Write the artifact (ZIP manifest + payload). Returns `path`.
+
+        The schedule sanitizer runs first: an artifact carrying an
+        unsuppressed error-severity diagnostic is refused (the paper's
+        predictability claims don't survive a corrupt schedule reaching
+        disk). `force=True` skips the gate — for operators triaging a
+        bad artifact, and for tests that need to persist corruptions.
+        """
+        if not force:
+            from ..analysis import analyze_deployment
+            analysis = analyze_deployment(self)
+            if not analysis.ok:
+                raise ArtifactError(
+                    f"{path}: refusing to persist a deployment with "
+                    f"unsuppressed error diagnostics "
+                    f"(save(force=True) overrides):\n{analysis.summary()}")
         payload = {
             "program": self.program, "schedule": self.schedule,
             "report": self.report, "machine": self.machine,
@@ -158,6 +176,7 @@ class Deployment:
             "backend_options": self.options.to_manifest(),
             "stages": self.stages,
             "artifacts": self.artifacts,
+            "suppressions": tuple(self.suppressions),
         }
         blob = pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL)
         manifest = {**self._manifest(),
@@ -169,7 +188,8 @@ class Deployment:
 
     @classmethod
     def load(cls, path: str, *, machine: HardwareModel | None = None,
-             graph: Graph | None = None) -> "Deployment":
+             graph: Graph | None = None,
+             verify: bool = True) -> "Deployment":
         """Reload a saved deployment, refusing stale artifacts.
 
         The payload's sha256 is checked against the manifest BEFORE
@@ -181,6 +201,12 @@ class Deployment:
         ahead-of-time contract: an artifact compiled for machine A never
         silently deploys on machine B. The payload is still a pickle, so
         only load artifacts from trusted sources (see module docstring).
+
+        With `verify` (the default) the schedule sanitizer then re-checks
+        the artifact's invariants — a hand-edited or force-saved artifact
+        with unsuppressed errors refuses to deploy; `verify=False` loads
+        it anyway (how the `python -m repro.analysis` linter opens
+        artifacts it is diagnosing).
         """
         try:
             with zipfile.ZipFile(path) as z:
@@ -205,7 +231,8 @@ class Deployment:
                       options=BackendOptions.from_manifest(
                           payload.get("backend_options")),
                       stages=payload["stages"],
-                      artifacts=payload.get("artifacts", {}))
+                      artifacts=payload.get("artifacts", {}),
+                      suppressions=tuple(payload.get("suppressions", ())))
             manifest_sig = manifest["graph_signature"]
             manifest_fp = manifest["machine_fingerprint"]
         except (zipfile.BadZipFile, KeyError, pickle.UnpicklingError,
@@ -237,6 +264,14 @@ class Deployment:
                 f"{path}: compiled for graph {manifest.get('graph')} "
                 f"({sig}), refusing to deploy graph {graph.name} "
                 f"({graph_signature(graph)})")
+        if verify:
+            from ..analysis import analyze_deployment
+            analysis = analyze_deployment(dep)
+            if not analysis.ok:
+                raise ArtifactError(
+                    f"{path}: artifact fails the schedule sanitizer "
+                    f"(load(verify=False) to inspect it anyway):\n"
+                    f"{analysis.summary()}")
         return dep
 
 
@@ -295,12 +330,14 @@ def save_bundle(dirpath: str, deployments: dict[str, Deployment], *,
     return dirpath
 
 
-def load_bundle(dirpath: str, *, machine: HardwareModel | None = None
+def load_bundle(dirpath: str, *, machine: HardwareModel | None = None,
+                verify: bool = True
                 ) -> tuple[dict[str, Deployment], dict, object]:
     """Reload a bundle -> (deployments, extra, objects).
 
     Every member goes through `Deployment.load` (full signature/fingerprint
-    validation, optionally against `machine`); the side payload's sha256 is
+    validation, optionally against `machine`, plus — with `verify`, the
+    default — the schedule sanitizer); the side payload's sha256 is
     checked against the manifest before unpickling. Raises `ArtifactError`
     on any stale, foreign, or corrupt piece."""
     mpath = os.path.join(dirpath, BUNDLE_MANIFEST)
@@ -316,7 +353,7 @@ def load_bundle(dirpath: str, *, machine: HardwareModel | None = None
     deployments = {}
     for name, m in manifest.get("members", {}).items():
         dep = Deployment.load(os.path.join(dirpath, m["file"]),
-                              machine=machine)
+                              machine=machine, verify=verify)
         if dep.graph_signature != m.get("graph_signature"):
             raise ArtifactError(
                 f"{dirpath}: member {name!r} signature drifted from the "
@@ -367,6 +404,8 @@ class TasksetDeployment:
     backend: str = "jax"
     options: BackendOptions = dataclasses.field(
         default_factory=BackendOptions)
+    suppressions: tuple = ()
+    analysis: object = None              # AnalysisReport when verified
 
     @property
     def schedulable(self) -> bool:

@@ -28,6 +28,8 @@ from typing import Protocol, runtime_checkable
 
 import numpy as np
 
+from ..analysis import (AnalysisReport, analyze_program, analyze_schedule,
+                        analyze_subtasks, analyze_wcet, parse_suppressions)
 from ..core.compiled import lower_program, supports_graph, SUPPORTED_KINDS
 from ..core.executor import init_params
 from ..core.graph import Graph
@@ -44,6 +46,12 @@ class PipelineError(ValueError):
 
 class DeadlineError(PipelineError):
     """The compiled WCET bound exceeds the requested deadline."""
+
+
+class VerificationError(PipelineError):
+    """The schedule sanitizer found a blocking diagnostic (see
+    `repro.analysis` and docs/analysis.md; waive specific findings with
+    `repro.compile(..., suppress=("RULE@scope", ...))`)."""
 
 
 def check_deadline(report, deadline: float | None, graph_name: str,
@@ -88,12 +96,16 @@ class PassContext:
     arbitration: str = "static"
     deadline: float | None = None
     validate: bool = True
+    strict: bool = False                 # verify: fail on warnings too
+    suppress: tuple = ()                 # "RULE" / "RULE@scope" waivers
+    backend_options: object = None       # BackendOptions, for the verifier
     # -- produced by passes --
     subtasks: list | None = None
     mapping: object = None
     schedule: object = None
     report: object = None
     program: object = None
+    analysis: object = None              # AnalysisReport from VerifyPass
     artifacts: dict = dataclasses.field(default_factory=dict)
     stages: list[StageRecord] = dataclasses.field(default_factory=list)
 
@@ -250,7 +262,52 @@ class LowerPass:
                 f"{len(ctx.program.batches)} fused op batches")
 
 
+class VerifyPass:
+    """Static schedule sanitizer (`repro.analysis`) as a pipeline stage.
+
+    Re-checks what the earlier passes produced instead of trusting them:
+    race/interference freedom over the static schedule, scratchpad
+    lifetime over the lowered program's megakernel plan, and WCET
+    soundness of the report. The full `AnalysisReport` lands in
+    `ctx.analysis` / `ctx.artifacts["verify"]`; any unsuppressed
+    error-severity diagnostic (with `ctx.strict`: any unsuppressed
+    diagnostic at all) raises `VerificationError`.
+    """
+
+    name = "verify"
+
+    def run(self, ctx: PassContext) -> str:
+        diags = []
+        if (ctx.schedule is not None and ctx.subtasks is not None
+                and ctx.mapping is not None):
+            diags += analyze_schedule(ctx.schedule, ctx.subtasks,
+                                      ctx.mapping, hw=ctx.hw)
+        if ctx.subtasks is not None:
+            diags += analyze_subtasks(ctx.subtasks, ctx.hw)
+        if ctx.program is not None:
+            diags += analyze_program(ctx.program, ctx.hw,
+                                     options=ctx.backend_options)
+        if ctx.report is not None:
+            diags += analyze_wcet(ctx.report, ctx.schedule,
+                                  subtasks=ctx.subtasks)
+        report = AnalysisReport(subject=ctx.graph.name, diagnostics=diags,
+                                suppressions=parse_suppressions(ctx.suppress))
+        ctx.analysis = report
+        ctx.artifacts[self.name] = report
+        blocking = report.unsuppressed() if ctx.strict else report.errors
+        if blocking:
+            shown = "\n".join("  " + d.row() for d in blocking[:10])
+            raise VerificationError(
+                f"{ctx.graph.name}: schedule sanitizer found "
+                f"{len(blocking)} blocking diagnostic(s):\n{shown}")
+        n_sup = len(diags) - len(report.unsuppressed())
+        return (f"{len(diags)} diagnostics, "
+                f"{len(report.errors)} errors"
+                + (f", {n_sup} suppressed" if n_sup else ""))
+
+
 def default_passes() -> list[Pass]:
-    """The paper-faithful stage sequence behind `repro.compile`."""
+    """The paper-faithful stage sequence behind `repro.compile`, plus the
+    schedule sanitizer as the final gate."""
     return [QuantizePass(), PartitionPass(), MapPass(), SchedulePass(),
-            WCETPass(), LowerPass()]
+            WCETPass(), LowerPass(), VerifyPass()]

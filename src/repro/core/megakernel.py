@@ -185,6 +185,22 @@ def plan_segments(prog: C.CompiledProgram, *, budget: int | None = None,
     return out
 
 
+def segment_footprint(prog: C.CompiledProgram, seg: Segment,
+                      dual: bool = True) -> int:
+    """Scratchpad bytes a fused segment keeps resident: the sum of its
+    steps' streamed operands, accumulators, and output tiles — exactly
+    the quantity `_pack` budgets against. Public so the static analyzer
+    (repro.analysis) can check the packing instead of trusting it."""
+    return sum(_step_bytes(prog, s, dual) for s in seg.steps)
+
+
+def segment_io(prog: C.CompiledProgram, seg: Segment
+               ) -> tuple[list[int], list[int], list[int]]:
+    """Public alias of `_segment_io` for the static analyzer: the
+    (streamed-in, weight, written-out) buffer indices of a segment."""
+    return _segment_io(prog, seg)
+
+
 # -- emission -----------------------------------------------------------------
 
 def _emit_step(step, local: dict, wvals: dict, prog: C.CompiledProgram,

@@ -725,58 +725,24 @@ def _schedule_eventq(subtasks: list[Subtask], mapping: Mapping,
 def validate_schedule(sched: StaticSchedule, subtasks: list[Subtask],
                       mapping: Mapping,
                       release: dict[int, float] | None = None) -> None:
-    """Structural invariants (property-tested): raise on any violation."""
-    # 1. exclusive DMA channel (the interference-freedom guarantee)
-    if sched.arbitration == "static":
-        prev_end = -1.0
-        for s in sorted(sched.dma, key=lambda s: (s.start, s.end)):
-            if s.start < prev_end - 1e-9:
-                raise ScheduleError(
-                    f"DMA overlap: {s} starts before {prev_end}")
-            prev_end = max(prev_end, s.end)
-    # 2. per-core compute slots disjoint + model order preserved
-    per_core: dict[int, list[ComputeSlot]] = {}
-    for s in sched.compute:
-        per_core.setdefault(s.core, []).append(s)
-    for c, slots in per_core.items():
-        slots.sort(key=lambda s: s.start)
-        for a, b in zip(slots, slots[1:]):
-            if b.start < a.end - 1e-9:
-                raise ScheduleError(f"core {c}: compute overlap {a} / {b}")
-            if b.sid < a.sid:
-                raise ScheduleError(f"core {c}: model order violated")
-    # 3. every subtask computed exactly once
-    sids = [s.sid for s in sched.compute]
-    if sorted(sids) != sorted(st.sid for st in subtasks):
-        raise ScheduleError("subtask set mismatch")
-    # 4. dataflow: compute starts after every dep's compute
-    end_of = {s.sid: s.end for s in sched.compute}
-    start_of = {s.sid: s.start for s in sched.compute}
-    for st in subtasks:
-        for d in st.deps:
-            if start_of[st.sid] < end_of[d] - 1e-9:
-                raise ScheduleError(
-                    f"subtask {st.sid} starts before dep {d} completes")
-    # 5. loads for a subtask finish before its compute starts
-    load_end: dict[int, float] = {}
-    for s in sched.dma:
-        if s.kind != "out":
-            load_end[s.sid] = max(load_end.get(s.sid, 0.0), s.end)
-    for sid, le in load_end.items():
-        if start_of[sid] < le - 1e-9:
-            raise ScheduleError(f"subtask {sid} computes before loads done")
-    # 6. nothing happens before a subtask's job release
-    if release:
-        for s in sched.dma:
-            if s.start < release.get(s.sid, 0.0) - 1e-9:
-                raise ScheduleError(
-                    f"DMA for subtask {s.sid} starts at {s.start} before "
-                    f"release {release[s.sid]}")
-        for s in sched.compute:
-            if s.start < release.get(s.sid, 0.0) - 1e-9:
-                raise ScheduleError(
-                    f"subtask {s.sid} computes at {s.start} before "
-                    f"release {release[s.sid]}")
+    """Structural invariants (property-tested): raise on any violation.
+
+    Thin wrapper over the static analyzer: the invariants this function
+    historically checked inline — exclusive DMA channel, per-core order,
+    subtask coverage, dataflow/load ordering, release gating — now live
+    in `repro.analysis.schedule_rules` as rules RACE001/RACE002,
+    SCHED001-003 (plus hardware-aware rules this wrapper does not run).
+    Any error-severity diagnostic raises `ScheduleError` carrying the
+    first few rule messages.
+    """
+    from ..analysis.schedule_rules import analyze_schedule
+    diags = [d for d in analyze_schedule(sched, subtasks, mapping,
+                                         release=release)
+             if d.severity == "error"]
+    if diags:
+        head = "; ".join(f"{d.rule}: {d.message}" for d in diags[:3])
+        more = f" (+{len(diags) - 3} more)" if len(diags) > 3 else ""
+        raise ScheduleError(head + more)
 
 
 def _overlaps(a: tuple, b: tuple) -> bool:

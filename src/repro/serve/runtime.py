@@ -1255,16 +1255,48 @@ class Server:
             engines[name] = eng
         return engines
 
+    # -- static analysis -----------------------------------------------------
+    def verify(self, *, suppress: tuple = ()):
+        """Run the schedule sanitizer (`repro.analysis`) over the active
+        taskset: the hyperperiod WCET schedule, every subtask's scratchpad
+        residency, the admission report's soundness, and each executable
+        network's deployment artifact. Returns the `AnalysisReport`;
+        `save` refuses to write a bundle whose report is not `ok`."""
+        import types
+        from ..analysis import AnalysisReport, parse_suppressions
+        from ..analysis.runner import taskset_diagnostics
+        if self.report is None:
+            self.analyze()
+        shim = types.SimpleNamespace(
+            taskset=self.compiled, machine=self.machine, report=self.report,
+            deployments={n: st.deployment for n, st in self._nets.items()
+                         if st.deployment is not None})
+        t0 = time.perf_counter()
+        report = AnalysisReport(
+            subject=f"server@{self.machine.name}",
+            diagnostics=taskset_diagnostics(shim),
+            suppressions=parse_suppressions(tuple(suppress)))
+        report.duration_s = time.perf_counter() - t0
+        return report
+
     # -- bundles -------------------------------------------------------------
     def save(self, dirpath: str) -> str:
         """Write the whole serving configuration as a multi-network bundle:
         one PR-4 `Deployment` artifact per executable network plus the
         taskset/queue metadata and (pickled) the machine and the graphs of
         analysis-only networks. step_fn callables are NOT serialized —
-        reattach them after `load` (via its `step_fns=` or `attach`)."""
-        from ..compiler import save_bundle
+        reattach them after `load` (via its `step_fns=` or `attach`).
+
+        The schedule sanitizer gates the write: a serving configuration
+        carrying an unsuppressed error-severity diagnostic is refused."""
+        from ..compiler import ArtifactError, save_bundle
         if self.report is None:
             self.analyze()
+        analysis = self.verify()
+        if not analysis.ok:
+            raise ArtifactError(
+                f"{dirpath}: refusing to save a serving bundle that fails "
+                f"the schedule sanitizer:\n{analysis.summary()}")
         deployments = {n: st.deployment for n, st in self._nets.items()
                        if st.deployment is not None}
         extra = {

@@ -78,7 +78,9 @@ def test_pipeline_stages_recorded():
     g, _ = _graph_and_input()
     dep = repro.compile(g, HW, use_cache=False)
     assert [s.name for s in dep.stages] == [
-        "quantize", "partition", "map", "schedule", "wcet", "lower"]
+        "quantize", "partition", "map", "schedule", "wcet", "lower",
+        "verify"]
+    assert dep.artifacts["verify"].ok
     assert all(s.duration_s >= 0 for s in dep.stages)
     assert all(s.summary for s in dep.stages)
     assert len(dep.artifacts["partition"]) > 0          # subtasks

@@ -40,6 +40,26 @@ def test_gate_fails_below_floor_and_on_missing_preset():
     assert not ok and all(r[3] is None for r in rows)
 
 
+def test_gate_fails_loudly_on_missing_gated_key():
+    """A gated key absent from either side is a named failing row, never
+    a KeyError traceback and never a silent pass."""
+    base = {"presets": [_row("a", 2.0, 4.0, 6.0)]}
+    cur_row = _row("a")
+    del cur_row["speedup_pallas_vs_seed"]
+    ok, rows = check({"presets": [cur_row]}, base, 0.7)
+    assert not ok
+    bad = [r for r in rows if not r[-1]]
+    assert [(r[0], r[1], r[3]) for r in bad] == \
+        [("a", "speedup_pallas_vs_seed", None)]
+    # missing from the committed baseline is a broken baseline, not a pass
+    base_row = _row("a")
+    del base_row["speedup_np_vs_seed"]
+    ok, rows = check({"presets": [_row("a")]},
+                     {"presets": [base_row]}, 0.7)
+    assert not ok
+    assert ("a", "speedup_np_vs_seed", None, None, None, False) in rows
+
+
 def test_committed_baseline_covers_smoke_presets():
     """The committed baseline must gate exactly what the CI smoke run
     produces: the smoke presets, each with every gated speedup key."""
@@ -69,6 +89,37 @@ def test_serve_gate_passes_and_fails_on_speedup():
     # no serve baseline stats -> nothing gated, vacuously ok
     ok, rows = check_serve({"continuous": {}}, {}, 0.7)
     assert ok and rows == []
+
+
+def test_serve_gate_fails_on_missing_key_and_missing_current():
+    # baseline section present but a gated key dropped out: loud failure
+    ok, rows = check_serve({"continuous": {"continuous_speedup": 2.0}},
+                           {"continuous": {"miss_rate": 0.0}}, 0.7)
+    assert not ok and rows[0][2] is None
+    # candidate run absent entirely (main() passes {}): fails, not skips
+    ok, rows = check_serve({}, {"continuous": {"continuous_speedup": 1.5}},
+                           0.7)
+    assert not ok and rows[0][3] is None and len(rows) == \
+        len(SERVE_GATED_KEYS)
+
+
+def test_main_fails_when_serve_current_missing(tmp_path, capsys):
+    """End-to-end: a committed serve baseline with no BENCH_serve.json
+    must exit 1 and name the missing file."""
+    from benchmarks.check_regression import main
+    cur = tmp_path / "BENCH_executor.json"
+    cur.write_text(json.dumps({"presets": [_row("a")]}))
+    base = tmp_path / "baseline_executor.json"
+    base.write_text(json.dumps({"presets": [_row("a")]}))
+    serve_base = tmp_path / "baseline_serve.json"
+    serve_base.write_text(
+        json.dumps({"continuous": {"continuous_speedup": 1.5}}))
+    rc = main(["--current", str(cur), "--baseline", str(base),
+               "--serve-current", str(tmp_path / "BENCH_serve.json"),
+               "--serve-baseline", str(serve_base)])
+    assert rc == 1
+    err = capsys.readouterr().err
+    assert "BENCH_serve.json" in err and "gates it" in err
 
 
 def test_committed_serve_baseline_schema():

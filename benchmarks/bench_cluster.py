@@ -1,0 +1,158 @@
+"""Replicated-fleet benchmark: `repro.cluster.ClusterServer` vs one Server.
+
+Emits ``BENCH_cluster.json`` with one **cluster** section: a single
+high-criticality CNN network served at exactly its per-hyperperiod
+capacity on (a) one `serve.Server` and (b) a 4-replica `ClusterServer`
+behind the WCET-aware router, offered 4x the load. Throughput is
+measured in **modeled time** (requests per modeled second over the same
+number of hyperperiods), not wall-clock: the replicas of a fleet
+serialize on one benchmark CPU, but on the machine the paper models they
+run concurrently — modeled time is the quantity the WCET analysis
+bounds, and it makes the ``cluster_speedup_vs_single`` ratio an exact,
+noise-free property of the routing (4 replicas x capacity load = 4.0)
+that ``check_regression.py`` gates against
+``benchmarks/baseline_cluster.json``.
+
+Absolute invariants (hard RuntimeError here, absolute CI gate there):
+zero high-criticality deadline misses on either side, every submitted
+ticket terminal, and the router must actually spread the load (every
+replica dispatched to).
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.cluster import ClusterServer
+from repro.core import cnn
+from repro.hw import scaled_paper_machine
+from repro.serve import Server
+
+HW = scaled_paper_machine(8)
+CNN_SLOTS = 2
+CNN_PERIOD = 1 / 100
+REPLICAS = 4
+# pinned host:target speed ratio: deadline checks compare *modeled* times
+# only, so the miss counts are deterministic on any benchmark host
+SPEED_RATIO = 1e6
+
+
+def _frames(n: int, seed: int = 0) -> list:
+    rng = np.random.default_rng(seed)
+    return [rng.integers(-64, 64, (24, 24, 3)).astype(np.int8)
+            for _ in range(n)]
+
+
+def _drain_stats(tickets: list, monitor, side: str) -> dict:
+    terminal = sum(1 for t in tickets if t.terminal)
+    if terminal != len(tickets):
+        raise RuntimeError(
+            f"{side}: {len(tickets) - terminal} tickets left non-terminal")
+    snap = monitor.snapshot()
+    hi = snap["networks"].get("cnn", {})
+    if hi.get("misses", 0):
+        raise RuntimeError(
+            f"{side}: {hi['misses']} high-criticality deadline misses at "
+            f"capacity load (pinned ratio {SPEED_RATIO:g})")
+    lats = sorted(t.result().latency_s for t in tickets if t.done)
+    return {
+        "tickets": len(tickets),
+        "terminal": terminal,
+        "hi_checks": hi.get("checks", 0),
+        "hi_misses": hi.get("misses", 0),
+        "p99_us": lats[min(len(lats) - 1, int(len(lats) * 0.99))] * 1e6,
+    }
+
+
+def _run_single(hyperperiods: int) -> dict:
+    srv = Server(HW, backend="numpy", num_cores=8, queue_capacity=256,
+                 speed_ratio=SPEED_RATIO)
+    srv.register("cnn", cnn.small_cnn(h=24, w=24), CNN_PERIOD,
+                 slots=CNN_SLOTS, criticality=2)
+    hp_s = srv.compiled.hyperperiod_s
+    per_hp = round(hp_s / CNN_PERIOD) * CNN_SLOTS     # capacity per hp
+    frames = iter(_frames((hyperperiods + 1) * per_hp))
+    for _ in range(per_hp):                           # warmup hyperperiod
+        srv.submit("cnn", next(frames))
+    srv.run(hyperperiods=1)
+    srv.monitor.reset()
+    tickets = []
+    for _ in range(hyperperiods):
+        for _ in range(per_hp):
+            tickets.append(srv.submit("cnn", next(frames)))
+        srv.run(hyperperiods=1)
+    stats = _drain_stats(tickets, srv.monitor, "single")
+    modeled_s = hyperperiods * hp_s
+    stats["throughput_rps_modeled"] = len(tickets) / modeled_s
+    return stats
+
+
+def _run_cluster(hyperperiods: int) -> dict:
+    cs = ClusterServer(HW, replicas=REPLICAS, backend="numpy", num_cores=8,
+                       queue_capacity=256, speed_ratio=SPEED_RATIO)
+    cs.register("cnn", cnn.small_cnn(h=24, w=24), CNN_PERIOD,
+                slots=CNN_SLOTS, criticality=2)
+    hp_s = cs.servers[0].compiled.hyperperiod_s
+    per_hp = round(hp_s / CNN_PERIOD) * CNN_SLOTS * REPLICAS   # 4x the load
+    frames = iter(_frames((hyperperiods + 1) * per_hp, seed=1))
+    for _ in range(per_hp):                           # warmup hyperperiod
+        cs.submit("cnn", next(frames))
+    cs.run(hyperperiods=1)
+    for srv in cs.servers:
+        srv.monitor.reset()
+    warm_dispatch = list(cs.dispatched)
+    tickets = []
+    for _ in range(hyperperiods):
+        for _ in range(per_hp):
+            tickets.append(cs.submit("cnn", next(frames)))
+        cs.run(hyperperiods=1)
+    merged = cs.telemetry()
+
+    class _Snap:                     # _drain_stats wants .snapshot()
+        @staticmethod
+        def snapshot():
+            return merged
+    stats = _drain_stats(tickets, _Snap, "cluster")
+    measured = [d - w for d, w in zip(cs.dispatched, warm_dispatch)]
+    if min(measured) < 1:
+        raise RuntimeError(
+            f"router starved a replica: dispatched {measured}")
+    modeled_s = hyperperiods * hp_s
+    stats["throughput_rps_modeled"] = len(tickets) / modeled_s
+    stats["replicas"] = REPLICAS
+    stats["dispatched"] = measured
+    return stats
+
+
+def run(csv_rows: list, smoke: bool = False) -> None:
+    hyperperiods = 8 if smoke else 24
+    print(f"\n== Replicated fleet: {REPLICAS}-replica ClusterServer vs one "
+          f"Server, CNN@{1 / CNN_PERIOD:.0f}Hz x{CNN_SLOTS} slots at "
+          f"capacity load, {hyperperiods} hyperperiods, {HW.name} ==")
+    single = _run_single(hyperperiods)
+    cluster = _run_cluster(hyperperiods)
+    speedup = (cluster["throughput_rps_modeled"]
+               / single["throughput_rps_modeled"])
+    stats = {
+        "hyperperiods": hyperperiods,
+        "replicas": REPLICAS,
+        "single": single,
+        "cluster": cluster,
+        "cluster_speedup_vs_single": speedup,
+    }
+    print(f"{'side':<10}{'tickets':>9}{'thr req/s (modeled)':>21}"
+          f"{'p99 us':>10}{'hi misses':>11}")
+    for side, s in (("single", single), ("cluster", cluster)):
+        print(f"{side:<10}{s['tickets']:>9}"
+              f"{s['throughput_rps_modeled']:>21.1f}{s['p99_us']:>10.1f}"
+              f"{s['hi_misses']:>11}")
+    print(f"cluster speedup vs single: {speedup:.2f}x "
+          f"(dispatched {cluster['dispatched']})")
+    csv_rows.append(("cluster/replicated", cluster["p99_us"],
+                     f"speedup={speedup:.2f};"
+                     f"hi_misses={cluster['hi_misses']}"))
+    with open("BENCH_cluster.json", "w") as f:
+        json.dump({"machine": HW.name, "cluster": stats}, f, indent=2)
+    print("wrote BENCH_cluster.json")

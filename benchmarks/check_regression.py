@@ -6,7 +6,12 @@ Compares a fresh ``BENCH_executor.json`` (written by
 compiled-backend speedup drops below ``threshold`` x its baseline value.
 When ``benchmarks/baseline_serve.json`` exists, the serve gate also runs:
 the continuous-batching speedup in ``BENCH_serve.json`` (written by
-``benchmarks.bench_serve``) is held to the same relative floor.
+``benchmarks.bench_serve``) is held to the same relative floor. Likewise
+``benchmarks/baseline_cluster.json`` gates the replicated-fleet speedup
+``cluster_speedup_vs_single`` in ``BENCH_cluster.json`` (written by
+``benchmarks.bench_cluster``), plus absolute fleet invariants: zero
+high-criticality misses on both sides, every ticket terminal, and every
+replica dispatched to.
 
 The overload-burst section of ``BENCH_serve.json`` is held to an
 ABSOLUTE robustness gate (no baseline involved): under the seeded
@@ -26,6 +31,8 @@ commit the new baseline:
         --json benchmarks/baseline_executor.json
     PYTHONPATH=src python -m benchmarks.run --smoke --only serve \
         && cp BENCH_serve.json benchmarks/baseline_serve.json
+    PYTHONPATH=src python -m benchmarks.run --smoke --only cluster \
+        && cp BENCH_cluster.json benchmarks/baseline_cluster.json
 """
 
 from __future__ import annotations
@@ -47,6 +54,12 @@ GATED_KEYS = ("speedup_np_vs_seed", "speedup_jax_b8_vs_seed",
 # ratio of the static batch-to-completion path over the continuous loop
 # on the same mixed trace in the same process.
 SERVE_GATED_KEYS = ("continuous_speedup",)
+
+# cluster keys gated from BENCH_cluster.json["cluster"]: the modeled-time
+# throughput ratio of the replicated fleet over one Server at capacity
+# load — an exact property of the routing (no host timing in it), so any
+# drop below the floor is a real routing/admission regression.
+CLUSTER_GATED_KEYS = ("cluster_speedup_vs_single",)
 
 
 def check(current: dict, baseline: dict, threshold: float = 0.7):
@@ -104,6 +117,76 @@ def check_serve(current: dict, baseline: dict, threshold: float = 0.7):
         rows.append(("continuous", key, base, cur, floor, row_ok))
         ok = ok and row_ok
     return ok, rows
+
+
+def check_cluster(current: dict, baseline: dict, threshold: float = 0.7):
+    """Fleet gate over the "cluster" stats dict; same row shape as
+    `check` with preset "cluster"."""
+    base_stats = baseline.get("cluster")
+    if base_stats is None:
+        return True, []        # no committed cluster baseline: nothing gated
+    cur_stats = current.get("cluster", {})
+    rows = []
+    ok = True
+    for key in CLUSTER_GATED_KEYS:
+        if key not in base_stats:
+            # a baseline that lost a gated key must fail loudly, not
+            # silently stop gating that metric
+            rows.append(("cluster", key, None, None, None, False))
+            ok = False
+            continue
+        base = float(base_stats[key])
+        floor = threshold * base
+        if key not in cur_stats:
+            rows.append(("cluster", key, base, None, floor, False))
+            ok = False
+            continue
+        cur = float(cur_stats[key])
+        row_ok = cur >= floor
+        rows.append(("cluster", key, base, cur, floor, row_ok))
+        ok = ok and row_ok
+    return ok, rows
+
+
+def check_cluster_absolute(current: dict):
+    """Absolute invariants over ``BENCH_cluster.json["cluster"]``.
+
+    Returns (ok, checks); checks are (description, value, ok) rows. An
+    absent section passes vacuously (older benchmark output)."""
+    stats = current.get("cluster")
+    if stats is None:
+        return True, []
+    single = stats.get("single", {})
+    cluster = stats.get("cluster", {})
+    dispatched = cluster.get("dispatched") or []
+    checks = [
+        (
+            "single hi_misses == 0 (capacity load meets every deadline)",
+            single.get("hi_misses"),
+            single.get("hi_misses") == 0,
+        ),
+        (
+            "cluster hi_misses == 0 (4x load over 4 replicas stays clean)",
+            cluster.get("hi_misses"),
+            cluster.get("hi_misses") == 0,
+        ),
+        (
+            "single terminal == tickets",
+            single.get("terminal"),
+            single.get("terminal") == single.get("tickets"),
+        ),
+        (
+            "cluster terminal == tickets (every ticket terminal fleet-wide)",
+            cluster.get("terminal"),
+            cluster.get("terminal") == cluster.get("tickets"),
+        ),
+        (
+            "every replica dispatched to (router spread the load)",
+            dispatched,
+            bool(dispatched) and min(dispatched) >= 1,
+        ),
+    ]
+    return all(ok for _, _, ok in checks), checks
 
 
 def check_overload(current: dict):
@@ -166,6 +249,13 @@ def main(argv=None) -> int:
         help="serve-loop baseline; the serve gate is skipped (with a "
         "notice) when this file does not exist",
     )
+    ap.add_argument("--cluster-current", default="BENCH_cluster.json")
+    ap.add_argument(
+        "--cluster-baseline",
+        default="benchmarks/baseline_cluster.json",
+        help="replicated-fleet baseline; the cluster gate is skipped "
+        "(with a notice) when this file does not exist",
+    )
     ap.add_argument(
         "--threshold",
         type=float,
@@ -201,10 +291,40 @@ def main(argv=None) -> int:
         rows = rows + serve_rows
     else:
         print(f"note: {args.serve_baseline} not found; serve gate skipped")
+    cluster_current = None
+    if os.path.exists(args.cluster_current):
+        with open(args.cluster_current) as f:
+            cluster_current = json.load(f)
+    if os.path.exists(args.cluster_baseline):
+        with open(args.cluster_baseline) as f:
+            cluster_baseline = json.load(f)
+        if cluster_current is None:
+            # same policy as the serve gate: a committed baseline with no
+            # candidate run means the benchmark silently did not run
+            print(
+                f"error: {args.cluster_current} not found but "
+                f"{args.cluster_baseline} gates it",
+                file=sys.stderr,
+            )
+        cluster_ok, cluster_rows = check_cluster(
+            cluster_current or {}, cluster_baseline, args.threshold
+        )
+        ok = ok and cluster_ok
+        rows = rows + cluster_rows
+    else:
+        print(
+            f"note: {args.cluster_baseline} not found; cluster gate skipped"
+        )
     overload_checks = []
     if serve_current is not None:
         overload_ok, overload_checks = check_overload(serve_current)
         ok = ok and overload_ok
+    cluster_checks = []
+    if cluster_current is not None:
+        cluster_abs_ok, cluster_checks = check_cluster_absolute(
+            cluster_current
+        )
+        ok = ok and cluster_abs_ok
     print(
         f"{'preset':<20}{'metric':<26}{'baseline':>9}{'floor':>8}"
         f"{'current':>9}  verdict"
@@ -213,6 +333,13 @@ def main(argv=None) -> int:
     if overload_checks:
         print("overload robustness gate (absolute):")
         for desc, value, row_ok in overload_checks:
+            print(
+                f"  {desc:<60} value={value}  "
+                f"{'ok' if row_ok else 'FAILED'}"
+            )
+    if cluster_checks:
+        print("cluster invariants gate (absolute):")
+        for desc, value, row_ok in cluster_checks:
             print(
                 f"  {desc:<60} value={value}  "
                 f"{'ok' if row_ok else 'FAILED'}"

@@ -12,6 +12,9 @@
                   CNN+LM taskset on numpy+jax, continuous-vs-static batching
                   comparison, and (full mode) the per-token LM WCET table;
                   emits BENCH_serve.json
+  bench_cluster   4-replica ClusterServer vs one Server at capacity load,
+                  modeled-time throughput behind the WCET-aware router;
+                  emits BENCH_cluster.json
   roofline        §Roofline table from the multi-pod dry-run artifacts
 
 ``--smoke`` runs a fast subset (taskset sweep + executor backends + serve
@@ -50,7 +53,7 @@ def main(argv: list[str] | None = None) -> None:
             sys.exit(2)
         only = set(argv[idx + 1].split(","))
     csv_rows: list[tuple] = []
-    from . import bench_executor, bench_serve, bench_taskset
+    from . import bench_cluster, bench_executor, bench_serve, bench_taskset
     if smoke:
         # the executor section owns BENCH_executor.json: CI's perf-smoke
         # job runs this once, then gates the artifact with
@@ -59,6 +62,7 @@ def main(argv: list[str] | None = None) -> None:
             ("taskset", lambda: bench_taskset.run(csv_rows, smoke=True)),
             ("executor", lambda: bench_executor.run(csv_rows, smoke=True)),
             ("serve", lambda: bench_serve.run(csv_rows, smoke=True)),
+            ("cluster", lambda: bench_cluster.run(csv_rows, smoke=True)),
         ]
     else:
         from . import bench_wcet, bench_schedule, bench_kernels, roofline
@@ -70,6 +74,7 @@ def main(argv: list[str] | None = None) -> None:
             ("executor", lambda: bench_executor.run(csv_rows)),
             ("kernels", lambda: bench_kernels.run(csv_rows)),
             ("serve", lambda: bench_serve.run(csv_rows)),
+            ("cluster", lambda: bench_cluster.run(csv_rows)),
             ("roofline", lambda: roofline.run(csv_rows)),
         ]
     if only is not None:

@@ -54,14 +54,21 @@ def main(argv: list[str] | None = None) -> int:
         ap.error("no artifacts given (pass .rtdep files or bundle dirs)")
 
     from ..compiler.deployment import ArtifactError
-    from .runner import analyze_artifact, analyze_bundle
+    from .runner import (
+        analyze_artifact,
+        analyze_bundle,
+        analyze_cluster,
+        is_cluster_artifact,
+    )
 
     suppress = tuple(args.suppress)
     failed = False
     broken = False
     for path in args.paths:
         try:
-            if os.path.isdir(path):
+            if os.path.isdir(path) and is_cluster_artifact(path):
+                reports = analyze_cluster(path, suppress=suppress)
+            elif os.path.isdir(path):
                 reports = analyze_bundle(path, suppress=suppress)
             else:
                 reports = [analyze_artifact(path, suppress=suppress)]

@@ -9,6 +9,7 @@ a corrupt artifact can still be linted instead of refusing to open).
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Any
 
@@ -145,3 +146,48 @@ def analyze_bundle(
         )
         for name, dep in sorted(deployments.items())
     ]
+
+
+def is_cluster_artifact(dirpath: str) -> bool:
+    """True when `dirpath` is a `ClusterServer.save` layout (a cluster
+    manifest next to a replica bundle)."""
+    from ..cluster.fleet import CLUSTER_MANIFEST
+
+    return os.path.isfile(os.path.join(dirpath, CLUSTER_MANIFEST))
+
+
+def analyze_cluster(
+    dirpath: str, *, suppress: tuple = ()
+) -> list[AnalysisReport]:
+    """Lint a cluster artifact: every member of the (shared) replica
+    bundle, one subject per member.
+
+    Replicas are identical by construction (`ClusterServer.save` persists
+    one bundle plus a manifest), so linting the bundle once covers the
+    whole fleet; the manifest itself is validated for shape here so a
+    corrupt cluster directory fails with exit 2 like any unreadable
+    artifact."""
+    import json
+
+    from ..cluster.fleet import CLUSTER_MANIFEST, REPLICA_BUNDLE
+
+    manifest_path = os.path.join(dirpath, CLUSTER_MANIFEST)
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    if manifest.get("kind") != "cluster":
+        raise ValueError(
+            f"{manifest_path}: manifest kind "
+            f"{manifest.get('kind')!r} != 'cluster'"
+        )
+    replicas = int(manifest.get("replicas", 0))
+    if replicas < 1:
+        raise ValueError(
+            f"{manifest_path}: replica count {replicas} < 1"
+        )
+    bundle = os.path.join(dirpath, REPLICA_BUNDLE)
+    if not os.path.isdir(bundle):
+        raise ValueError(
+            f"{dirpath}: cluster manifest present but replica bundle "
+            f"{REPLICA_BUNDLE!r} is missing"
+        )
+    return analyze_bundle(bundle, suppress=suppress)

@@ -77,8 +77,13 @@ def compile(graph_or_taskset, machine: HardwareModel, *,   # noqa: A001
     come from the specs (the `deadline` argument must be None).
     """
     options = backend_options or BackendOptions()
-    # fail fast on unknown backend / unsupported options
-    get_backend(backend).validate_options(options)
+    # fail fast on unknown backend / unsupported options / mismatched
+    # mesh pairing — the mesh shape is part of the machine fingerprint,
+    # so letting either half through alone would mint artifacts that
+    # misdescribe how they execute
+    be = get_backend(backend)
+    be.validate_options(options)
+    be.validate_machine(machine)
     if isinstance(graph_or_taskset, Graph):
         return _compile_graph(graph_or_taskset, machine, backend=backend,
                               deadline=deadline, params=params,

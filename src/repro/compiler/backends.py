@@ -120,12 +120,16 @@ class BackendCapabilities:
         "tpu"); `interpret=False` off that device fails validation.
     supported_options — `BackendOptions` field names this backend honors;
         explicitly-set fields outside this set fail validation.
+    mesh — executes across a jax device mesh: requires (and is required
+        by) a machine whose `HardwareModel.mesh_shape` is set —
+        `repro.compile` enforces the pairing both ways.
     """
 
     supports_batched_native: bool = False
     supports_decode: bool = False
     requires_device: str | None = None
     supported_options: frozenset = frozenset()
+    mesh: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -156,6 +160,25 @@ class Backend:
                     f"backend {self.name!r} with interpret=False requires "
                     f"a {dev!r} device (running on "
                     f"{jax.default_backend()!r}); use interpret=None/True")
+
+    def validate_machine(self, machine) -> None:
+        """Raise `BackendError` when the backend/machine mesh pairing is
+        inconsistent: a mesh backend needs a machine carrying a mesh shape
+        (`HardwareModel.with_mesh`), and a single-device backend refuses a
+        mesh machine. Enforced at compile time, per-call backend override,
+        and `with_backend` swap — an invalid pairing never reaches a
+        runner."""
+        mesh_shape = getattr(machine, "mesh_shape", None)
+        if self.capabilities.mesh and mesh_shape is None:
+            raise BackendError(
+                f"backend {self.name!r} executes across a device mesh but "
+                f"machine {machine.name!r} has no mesh shape; target it "
+                f"with machine.with_mesh(data, model)")
+        if mesh_shape is not None and not self.capabilities.mesh:
+            raise BackendError(
+                f"machine {machine.name!r} targets mesh shape {mesh_shape} "
+                f"but backend {self.name!r} is single-device; use "
+                f'backend="mesh" (or a machine without a mesh shape)')
 
 
 _REGISTRY: dict[str, Backend] = {}
@@ -312,6 +335,18 @@ def _pallas_batched(prog: _C.CompiledProgram,
                                 batched=True))
 
 
+def _mesh_single(prog: _C.CompiledProgram,
+                 options: BackendOptions | None = None) -> Runner:
+    from ..cluster.mesh import mesh_single_runner
+    return mesh_single_runner(prog)
+
+
+def _mesh_batched(prog: _C.CompiledProgram,
+                  options: BackendOptions | None = None) -> Runner:
+    from ..cluster.mesh import mesh_batched_runner
+    return mesh_batched_runner(prog)
+
+
 register_backend("numpy", single=_numpy_single,
                  capabilities=BackendCapabilities())
 register_backend("jax", single=_jax_single, batched=_jax_batched,
@@ -324,3 +359,7 @@ register_backend("pallas", single=_pallas_single, batched=_pallas_batched,
                      supported_options=frozenset(
                          {"interpret", "megakernel", "scratchpad_budget",
                           "max_kernels"})))
+register_backend("mesh", single=_mesh_single, batched=_mesh_batched,
+                 capabilities=BackendCapabilities(
+                     supports_batched_native=True, supports_decode=True,
+                     mesh=True))

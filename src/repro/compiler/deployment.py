@@ -98,6 +98,7 @@ class Deployment:
         if key not in self._runners:
             be = get_backend(name)
             be.validate_options(self.options)
+            be.validate_machine(self.machine)
             make = be.batched if batched else be.single
             self._runners[key] = make(self.program, self.options)
         return self._runners[key]
@@ -124,6 +125,7 @@ class Deployment:
         be = get_backend(name)                  # fail fast if unknown
         opts = self.options if options is None else options
         be.validate_options(opts)               # capability check at swap
+        be.validate_machine(self.machine)       # mesh pairing check too
         return dataclasses.replace(self, backend=name, options=opts)
 
     # -- reporting -----------------------------------------------------------

@@ -294,6 +294,41 @@ def lower_program(g: Graph, params: dict, subtasks: list[Subtask],
         hw=hw)
 
 
+# -- mesh partitioning --------------------------------------------------------
+
+def partition_streams(prog: CompiledProgram,
+                      n_groups: int) -> list[dict[int, np.ndarray]]:
+    """Split the per-core instruction streams into `n_groups` contiguous
+    core blocks — the mesh-model-axis decomposition `repro.cluster.mesh`
+    executes (device d of the model axis runs core block d).
+
+    Returns one `{op_idx: tiles}` dict per group, where `tiles` is the
+    (T, 4) / (T, 2) bounds array of every tile the group's cores were
+    scheduled to run for that op. Because the lowering already verified
+    that each op's full tile set exactly covers its output, the union of
+    the per-group tile sets is exact and disjoint: summing the groups'
+    partial results (a `lax.psum` over the model axis) reconstructs the
+    single-device value bit-for-bit for the integer accumulation paths.
+    """
+    if n_groups < 1:
+        raise CompileError(f"n_groups must be >= 1, got {n_groups}")
+    if prog.num_cores % n_groups != 0:
+        raise CompileError(
+            f"cannot partition {prog.num_cores} core streams into "
+            f"{n_groups} mesh groups: group count must divide the "
+            f"core count")
+    per = prog.num_cores // n_groups
+    raw: list[dict[int, list[tuple[int, ...]]]] = [
+        {} for _ in range(n_groups)]
+    for core, stream in enumerate(prog.core_streams):
+        g = core // per
+        for ins in stream:
+            raw[g].setdefault(ins.op_idx, []).append(ins.bounds)
+    return [{op_idx: np.array(sorted(tiles), dtype=np.int64)
+             for op_idx, tiles in group.items()}
+            for group in raw]
+
+
 # -- numpy backend ------------------------------------------------------------
 
 _GEMM_CHUNK = 8192               # rows per BLAS call (bounds temp memory)

@@ -47,6 +47,12 @@ class HardwareModel:
     dma_channels: int = 1            # paper: exactly one transaction at a time
     # -- analysis --
     wcet_margin: float = 1.25        # multiplicative safety margin on bounds
+    # -- scale-out (repro.cluster) --
+    # (data, model) jax device-mesh shape the compiled program is sharded
+    # over, or None for single-device execution. Part of the dataclass, so
+    # `fingerprint()` folds it in: an artifact compiled for one mesh shape
+    # refuses to load against any other (Deployment.load).
+    mesh_shape: tuple | None = None
 
     # Derived helpers -------------------------------------------------------
     def fingerprint(self) -> str:
@@ -77,6 +83,22 @@ class HardwareModel:
 
     def wcet_dma_s(self, nbytes: float) -> float:
         return self.dma_time_s(nbytes) * self.wcet_margin
+
+    def with_mesh(self, data: int = 1, model: int = 1) -> "HardwareModel":
+        """The same machine targeted at a (data, model) jax device mesh.
+
+        The mesh-sharded executor (`repro.cluster.mesh`, backend "mesh")
+        maps the machine's worker cores in contiguous blocks onto the
+        `model` axis and the serving batch onto the `data` axis. The new
+        machine's name and fingerprint both carry the mesh shape, so mesh
+        artifacts and single-device artifacts never interchange silently.
+        """
+        if data < 1 or model < 1:
+            raise ValueError(
+                f"mesh axes must be >= 1, got data={data} model={model}")
+        return dataclasses.replace(
+            self, name=f"{self.name}+mesh{data}x{model}",
+            mesh_shape=(data, model))
 
 
 # TPU v5e: constants fixed by the task spec.

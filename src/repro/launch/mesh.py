@@ -33,7 +33,27 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0):
-    """Small mesh over however many (possibly forced-host) devices exist."""
+    """Small mesh over however many (possibly forced-host) devices exist.
+
+    The axis product must divide the device count: `jax.make_mesh` happily
+    builds a 3-device mesh on an 8-device host (silently stranding five
+    devices), which downstream code then mistakes for full-host sharding.
+    Raises `ValueError` naming the axis sizes and the device count when
+    `data * model * pod` does not divide `len(jax.devices())`.
+    """
+    if data < 1 or model < 1 or pod < 0:
+        raise ValueError(
+            f"mesh axis sizes must be positive (pod >= 0), got "
+            f"data={data} model={model} pod={pod}")
+    n_devices = len(jax.devices())
+    product = data * model * (pod or 1)
+    if n_devices % product != 0:
+        axes_s = (f"pod={pod} data={data} model={model}" if pod
+                  else f"data={data} model={model}")
+        raise ValueError(
+            f"mesh shape {axes_s} (= {product} devices) does not divide "
+            f"the {n_devices} available device(s); pick axis sizes whose "
+            f"product divides the device count")
     if pod:
         shape, axes = (pod, data, model), ("pod", "data", "model")
     else:

@@ -195,6 +195,56 @@ class DeadlineMonitor:
             return 0.0
         return acc[0] / (acc[1] * acc[2])
 
+    # -- aggregation ---------------------------------------------------------
+    def merge(self, other: "DeadlineMonitor") -> "DeadlineMonitor":
+        """Fold `other`'s accounting into this monitor (in place).
+
+        Built for cross-replica telemetry (`repro.cluster.ClusterServer`):
+        each replica keeps its own monitor, and the fleet snapshot is the
+        merge of all of them. Checks/misses/histograms/events add; the
+        latency and met/missed reservoirs extend (bounded by this monitor's
+        `max_samples`, newest samples win); occupancy sums and observation
+        counts add, which keeps `mean_occupancy` the true overall mean.
+        Slot capacities must agree when both sides observed a network —
+        replicas of the same bundle can't disagree on a slot pool size.
+        Calibration: a monitor with no ratio adopts the other's; otherwise
+        its own (pinned or measured) ratio is kept. Returns self.
+        """
+        for name, n in other.checks.items():
+            self.checks[name] = self.checks.get(name, 0) + n
+        for name, n in other.misses.items():
+            self.misses[name] = self.misses.get(name, 0) + n
+        for name, vals in other._lat.items():
+            lat = self._lat.setdefault(
+                name, deque(maxlen=self.max_samples))
+            lat.extend(vals)
+        for name, flags in other._met.items():
+            met = self._met.setdefault(
+                name, deque(maxlen=self.max_samples))
+            met.extend(flags)
+        for name, hist in other._hist.items():
+            mine = self._hist.setdefault(name, {})
+            for bucket, n in hist.items():
+                mine[bucket] = mine.get(bucket, 0) + n
+        for name, acc in other._occ.items():
+            mine = self._occ.get(name)
+            if mine is None:
+                self._occ[name] = list(acc)
+            else:
+                if mine[2] != acc[2]:
+                    raise ValueError(
+                        f"cannot merge occupancy for {name!r}: slot "
+                        f"capacities differ ({mine[2]} vs {acc[2]})")
+                mine[0] += acc[0]
+                mine[1] += acc[1]
+        for name, per in other.events.items():
+            mine_ev = self.events.setdefault(name, {})
+            for kind, n in per.items():
+                mine_ev[kind] = mine_ev.get(kind, 0) + n
+        if self._ratio is None and other._ratio is not None:
+            self._ratio = other._ratio
+        return self
+
     # -- telemetry -----------------------------------------------------------
     @staticmethod
     def _bucket(latency_s: float) -> int:

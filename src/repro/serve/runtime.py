@@ -642,6 +642,39 @@ class Server:
     def queue_depths(self) -> dict[str, int]:
         return {n: len(st.queue) for n, st in self._nets.items()}
 
+    def network_status(self, name: str) -> dict:
+        """One network's admission-relevant state, as a plain dict.
+
+        The cluster router (`repro.cluster.Router`) ranks replicas on this:
+        queue depth/capacity and slots give the backlog, the WCET response
+        bound and effective deadline give the headroom, and the
+        shed/breaker/departing flags mark replicas that would resolve a
+        submission degraded (shed, open breaker) or are draining toward a
+        staged mode that no longer carries the network (`departing`).
+        `bound_s` is None while the network is out of the analyzed program
+        (e.g. shed: the report no longer carries a bound for it).
+        """
+        st = self._net(name)
+        if self.report is None:
+            self.analyze()
+        try:
+            bound = self.report.bound(name)
+        except KeyError:
+            bound = None
+        return {
+            "queue_depth": len(st.queue) if st.queue is not None else 0,
+            "queue_capacity": (st.queue.capacity
+                               if st.queue is not None else 0),
+            "slots": st.slots,
+            "shed": st.shed,
+            "breaker_open": (st.breaker is not None
+                             and st.breaker.state == "open"),
+            "departing": (self._staged_mode is not None
+                          and name not in self._staged_mode.nets),
+            "bound_s": bound,
+            "deadline_s": st.spec.deadline,
+        }
+
     # -- release-order execution ---------------------------------------------
     def step(self) -> Job:
         """Execute the next job of the hyperperiod program (release order),

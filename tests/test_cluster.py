@@ -1,0 +1,485 @@
+"""repro.cluster: mesh-sharded execution, monitor merging, the WCET-aware
+router, and the replicated Server fleet.
+
+Single-device coverage runs the real shard_map path on a (1, 1) mesh (the
+mesh machinery is exercised, just with one shard per axis); the
+`multi_device` tests assert the actual cross-device contract — bit-exact
+vs the single-device jax backend on every mesh shape — and are skipped
+unless the suite runs under XLA_FLAGS=--xla_force_host_platform_device_count=8
+(the CI multi-device step).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+import repro
+from repro.cluster import ClusterServer, NoReplicaError, Router
+from repro.cluster.fleet import ClusterError
+from repro.cluster.mesh import mesh_batched_runner, mesh_single_runner
+from repro.core import (analyze, cnn, init_params, lower_program,
+                        reference_forward)
+from repro.core.compiled import CompileError, partition_streams
+from repro.hw import scaled_paper_machine
+from repro.launch.mesh import make_host_mesh
+from repro.serve.monitor import DeadlineMonitor
+
+N_DEV = len(jax.devices())
+multi_device = pytest.mark.skipif(
+    N_DEV < 8, reason="needs XLA_FLAGS=--xla_force_host_platform_"
+    "device_count=8 (CI multi-device step)")
+
+HW = scaled_paper_machine(8)
+
+
+def _frame(seed=0, shape=(32, 32, 3)):
+    return np.random.default_rng(seed).integers(
+        -64, 64, size=shape).astype(np.int8)
+
+
+def _mesh_prog(data, model, cores=4, seed=1):
+    g = cnn.small_cnn()
+    hw = scaled_paper_machine(cores).with_mesh(data, model)
+    _, sched, subtasks, mapping = analyze(g, hw, num_cores=cores)
+    params = init_params(g, seed=seed)
+    prog = lower_program(g, params, subtasks, mapping, sched, hw=hw)
+    return g, params, prog
+
+
+# -- make_host_mesh validation (satellite) ------------------------------------
+
+def test_make_host_mesh_rejects_non_divisible():
+    bad = N_DEV + 1 if N_DEV > 1 else 3
+    with pytest.raises(ValueError) as ei:
+        make_host_mesh(data=bad, model=1)
+    msg = str(ei.value)
+    assert f"data={bad}" in msg and str(N_DEV) in msg
+
+
+def test_make_host_mesh_rejects_non_divisible_pod():
+    bad = N_DEV + 1 if N_DEV > 1 else 5
+    with pytest.raises(ValueError) as ei:
+        make_host_mesh(data=1, model=1, pod=bad)
+    assert f"pod={bad}" in str(ei.value)
+
+
+def test_make_host_mesh_rejects_nonpositive_axes():
+    with pytest.raises(ValueError):
+        make_host_mesh(data=0, model=1)
+    with pytest.raises(ValueError):
+        make_host_mesh(data=1, model=-2)
+
+
+def test_make_host_mesh_accepts_divisible():
+    mesh = make_host_mesh(data=1, model=1)
+    assert dict(mesh.shape) == {"data": 1, "model": 1}
+
+
+@multi_device
+def test_make_host_mesh_silent_shrink_bug_fixed():
+    """jax.make_mesh((3, 1)) on 8 devices silently builds a 3-device mesh;
+    make_host_mesh must refuse instead of stranding devices."""
+    with pytest.raises(ValueError):
+        make_host_mesh(data=3, model=1)
+    mesh = make_host_mesh(data=2, model=4)
+    assert mesh.devices.size == 8
+
+
+# -- HardwareModel.with_mesh ---------------------------------------------------
+
+def test_with_mesh_changes_fingerprint_and_name():
+    hw = scaled_paper_machine(4)
+    m = hw.with_mesh(2, 2)
+    assert m.mesh_shape == (2, 2)
+    assert m.name.endswith("+mesh2x2")
+    fps = {hw.fingerprint(), m.fingerprint(),
+           hw.with_mesh(1, 4).fingerprint(), hw.with_mesh(4, 1).fingerprint()}
+    assert len(fps) == 4                     # every shape is distinct
+
+
+def test_with_mesh_rejects_bad_axes():
+    with pytest.raises(ValueError):
+        scaled_paper_machine(4).with_mesh(0, 2)
+
+
+# -- partition_streams ---------------------------------------------------------
+
+def test_partition_streams_exactly_covers():
+    """The union of the per-group tile sets is the program's full tile set,
+    per op — nothing lost, nothing duplicated."""
+    _, _, prog = _mesh_prog(1, 1)
+    for n in (1, 2, 4):
+        parts = partition_streams(prog, n)
+        assert len(parts) == n
+        for b in prog.batches:
+            got = sorted(tuple(t) for g in parts
+                         for t in g.get(b.op_idx, []))
+            assert got == sorted(tuple(t) for t in b.tiles)
+
+
+def test_partition_streams_respects_core_blocks():
+    _, _, prog = _mesh_prog(1, 1)
+    parts = partition_streams(prog, 2)
+    per = prog.num_cores // 2
+    for core, stream in enumerate(prog.core_streams):
+        g = core // per
+        for ins in stream:
+            assert any(tuple(ins.bounds) == tuple(t)
+                       for t in parts[g][ins.op_idx])
+
+
+def test_partition_streams_rejects_non_divisor():
+    _, _, prog = _mesh_prog(1, 1)
+    with pytest.raises(CompileError) as ei:
+        partition_streams(prog, 3)
+    assert "4" in str(ei.value) and "3" in str(ei.value)
+    with pytest.raises(CompileError):
+        partition_streams(prog, 0)
+
+
+# -- DeadlineMonitor.merge (satellite) ----------------------------------------
+
+def _filled_monitor(latencies, bound=1.0, network="n", ratio=1.0):
+    m = DeadlineMonitor(speed_ratio=ratio)
+    for lat in latencies:
+        m.check(network, lat, bound)
+    return m
+
+
+def test_monitor_merge_counts_and_reservoirs():
+    a = _filled_monitor([0.5, 0.7, 9.0])     # 1 miss (budget 1.5)
+    b = _filled_monitor([0.2, 8.0, 7.0])     # 2 misses
+    out = a.merge(b)
+    assert out is a                           # merges in place, chains
+    assert a.checks["n"] == 6
+    assert a.misses["n"] == 3
+    snap = a.snapshot()["networks"]["n"]
+    assert snap["max_s"] == 9.0
+    assert sum(snap["histogram"].values()) == 6
+
+
+def test_monitor_merge_disjoint_networks():
+    a = _filled_monitor([0.5], network="x")
+    b = _filled_monitor([0.5, 0.6], network="y")
+    a.merge(b)
+    assert a.checks == {"x": 1, "y": 2}
+    assert a.miss_rate("y") == 0.0
+
+
+def test_monitor_merge_occupancy_mean_is_global():
+    a = DeadlineMonitor(speed_ratio=1.0)
+    b = DeadlineMonitor(speed_ratio=1.0)
+    a.record_occupancy("n", 2, 4)
+    a.record_occupancy("n", 4, 4)
+    b.record_occupancy("n", 0, 4)
+    b.record_occupancy("n", 2, 4)
+    a.merge(b)
+    assert a.mean_occupancy("n") == pytest.approx(8 / 16)
+
+
+def test_monitor_merge_occupancy_capacity_mismatch():
+    a = DeadlineMonitor(speed_ratio=1.0)
+    b = DeadlineMonitor(speed_ratio=1.0)
+    a.record_occupancy("n", 1, 4)
+    b.record_occupancy("n", 1, 8)
+    with pytest.raises(ValueError):
+        a.merge(b)
+
+
+def test_monitor_merge_events_and_ratio():
+    a = DeadlineMonitor()                     # uncalibrated
+    b = DeadlineMonitor(speed_ratio=2.5)
+    b.record_event("n", "shed")
+    b.record_event("n", "shed")
+    b.record_event("n", "retry")
+    a.merge(b)
+    assert a.speed_ratio == 2.5               # adopts the calibrated side
+    assert a.event_count("shed") == 2 and a.event_count("retry") == 1
+    c = DeadlineMonitor(speed_ratio=9.0)
+    c.merge(b)
+    assert c.speed_ratio == 9.0               # keeps its own when set
+
+
+def test_monitor_merge_bounds_reservoir():
+    a = DeadlineMonitor(speed_ratio=1.0, max_samples=4)
+    b = _filled_monitor([0.1] * 10)
+    a.merge(b)
+    assert len(a._lat["n"]) == 4              # self's maxlen caps
+
+
+# -- mesh execution ------------------------------------------------------------
+
+def test_mesh_runner_bit_exact_1x1():
+    """The shard_map path itself (exercised on any device count) is
+    bit-exact vs the whole-graph oracle."""
+    g, params, prog = _mesh_prog(1, 1)
+    x = _frame(2)
+    ref = reference_forward(g, params, {"input": x})
+    out = mesh_single_runner(prog)({"input": x})
+    for t in g.outputs:
+        assert np.array_equal(ref[t], out[t])
+
+
+@pytest.mark.parametrize("batch", [1, 3])
+def test_mesh_batched_runner_1x1(batch):
+    g, params, prog = _mesh_prog(1, 1)
+    xb = np.stack([_frame(10 + i) for i in range(batch)])
+    out = mesh_batched_runner(prog)({"input": xb})
+    for i in range(batch):
+        ref = reference_forward(g, params, {"input": xb[i]})
+        for t in g.outputs:
+            assert np.array_equal(ref[t], out[t][i])
+
+
+@multi_device
+@pytest.mark.parametrize("shape", [(1, 4), (2, 2), (2, 4), (8, 1)])
+def test_mesh_bit_exact_vs_jax_multi_device(shape):
+    """Acceptance: on forced 8-device CPU a mesh-compiled deployment is
+    bit-exact vs the single-device jax backend, for data-, model-, and
+    mixed-parallel mesh shapes — including a ragged batch."""
+    data, model = shape
+    g = cnn.small_cnn()
+    params = init_params(g, seed=3)
+    hw = scaled_paper_machine(4)
+    jax_dep = repro.compile(g, hw, backend="jax", params=params,
+                            num_cores=4)
+    mesh_dep = repro.compile(g, hw.with_mesh(data, model), backend="mesh",
+                             params=params, num_cores=4)
+    xb = np.stack([_frame(20 + i) for i in range(5)])     # ragged vs data
+    ref = jax_dep.run({"input": xb}, batched=True)
+    out = mesh_dep.run({"input": xb}, batched=True)
+    for t in g.outputs:
+        assert np.array_equal(ref[t], out[t])
+    x = _frame(30)
+    ref1 = jax_dep.run({"input": x})
+    out1 = mesh_dep.run({"input": x})
+    for t in g.outputs:
+        assert np.array_equal(ref1[t], out1[t])
+
+
+def test_mesh_backend_machine_pairing_enforced():
+    from repro.compiler import BackendError
+    g = cnn.small_cnn()
+    hw = scaled_paper_machine(4)
+    with pytest.raises(BackendError):
+        repro.compile(g, hw, backend="mesh")
+    with pytest.raises(BackendError):
+        repro.compile(g, hw.with_mesh(1, 1), backend="jax")
+
+
+def test_mesh_pairing_enforced_on_override_and_swap():
+    """The per-call backend override and `with_backend` are guarded like
+    `repro.compile`: the mesh backend never runs on a mesh-less machine
+    (and vice versa), so iterating `list_backends()` over a deployment
+    fails cleanly instead of deep inside the mesh lowering."""
+    from repro.compiler import BackendError
+    g = cnn.small_cnn()
+    dep = repro.compile(g, scaled_paper_machine(4), backend="numpy",
+                        num_cores=4)
+    x = _frame(0)
+    with pytest.raises(BackendError, match="mesh shape"):
+        dep.run({"input": x}, backend="mesh")
+    with pytest.raises(BackendError, match="mesh shape"):
+        dep.with_backend("mesh")
+    mesh_dep = repro.compile(g, scaled_paper_machine(4).with_mesh(1, 1),
+                             backend="mesh", num_cores=4)
+    with pytest.raises(BackendError, match="single-device"):
+        mesh_dep.run({"input": x}, backend="jax")
+    with pytest.raises(BackendError, match="single-device"):
+        mesh_dep.with_backend("numpy")
+
+
+def test_mesh_model_axis_must_divide_cores():
+    g = cnn.small_cnn()
+    hw = scaled_paper_machine(4).with_mesh(1, 3)   # 3 does not divide 4
+    dep = repro.compile(g, hw, backend="mesh", num_cores=4)
+    with pytest.raises(CompileError):
+        dep.run({"input": _frame(1)})
+
+
+def test_mesh_artifact_refuses_wrong_mesh(tmp_path):
+    """Acceptance: loading a mesh artifact on a mismatched mesh
+    fingerprint raises (and so does a plain-machine load)."""
+    from repro.compiler import ArtifactError
+    g = cnn.small_cnn()
+    params = init_params(g, seed=1)
+    hw = scaled_paper_machine(4)
+    dep = repro.compile(g, hw.with_mesh(1, 1), backend="mesh",
+                        params=params, num_cores=4)
+    path = str(tmp_path / "net.rtdep")
+    dep.save(path)
+    dep2 = repro.Deployment.load(path, machine=hw.with_mesh(1, 1))
+    x = _frame(4)
+    ref = dep.run({"input": x})
+    out = dep2.run({"input": x})
+    for t in g.outputs:
+        assert np.array_equal(ref[t], out[t])
+    with pytest.raises(ArtifactError):
+        repro.Deployment.load(path, machine=hw.with_mesh(1, 2))
+    with pytest.raises(ArtifactError):
+        repro.Deployment.load(path, machine=hw)
+
+
+# -- router --------------------------------------------------------------------
+
+def _status(depth=0, cap=8, slots=1, shed=False, breaker=False,
+            departing=False, bound=0.01, deadline=0.02):
+    return {"queue_depth": depth, "queue_capacity": cap, "slots": slots,
+            "shed": shed, "breaker_open": breaker, "departing": departing,
+            "bound_s": bound, "deadline_s": deadline}
+
+
+def test_router_prefers_headroom_then_depth_then_index():
+    # replica 1 has the deepest backlog -> least headroom
+    picked = Router.pick("n", [_status(depth=2), _status(depth=4),
+                               _status(depth=2)])
+    assert picked == 0                        # tie on headroom: lowest index
+    picked = Router.pick("n", [_status(depth=4), _status(depth=2),
+                               _status(depth=3)])
+    assert picked == 1
+
+
+def test_router_headroom_scales_backlog_by_slots():
+    # same depth, but replica 1's slots drain it in fewer hyperperiods
+    a = _status(depth=4, slots=1)
+    b = _status(depth=4, slots=4)
+    assert Router.headroom(b) > Router.headroom(a)
+    assert Router.pick("n", [a, b]) == 1
+
+
+def test_router_routes_around_unavailable_replicas():
+    for flag in ("shed", "breaker_open", "departing"):
+        statuses = [_status(), _status(), _status()]
+        statuses[0][{"shed": "shed", "breaker_open": "breaker_open",
+                     "departing": "departing"}[flag]] = True
+        assert Router.pick("n", statuses) == 1
+
+
+def test_router_degraded_fallback_when_none_eligible():
+    # every replica shed: route to the least-loaded one anyway (it resolves
+    # the ticket degraded — terminal — rather than erroring the caller)
+    statuses = [_status(shed=True, depth=3), _status(shed=True, depth=1),
+                _status(shed=True, depth=2)]
+    assert Router.pick("n", statuses) == 1
+
+
+def test_router_saturated_raises():
+    full = _status(depth=8, cap=8)
+    with pytest.raises(NoReplicaError):
+        Router.pick("n", [full, dict(full)])
+    with pytest.raises(NoReplicaError):
+        Router.pick("n", [])
+
+
+def test_router_deterministic():
+    statuses = [_status(depth=1), _status(depth=2), _status(depth=1)]
+    picks = {Router.pick("n", [dict(s) for s in statuses])
+             for _ in range(10)}
+    assert picks == {0}
+    rows = Router.explain("n", statuses)
+    assert [r["replica"] for r in rows] == [0, 2, 1]
+    assert all(r["eligible"] for r in rows)
+
+
+# -- fleet ---------------------------------------------------------------------
+
+def _cluster(replicas=3, **kw):
+    cs = ClusterServer(HW, replicas=replicas, backend="numpy",
+                       num_cores=4, speed_ratio=1e6, **kw)
+    cs.register("cnn", cnn.small_cnn(), period_s=1 / 50, slots=2,
+                criticality=1)
+    return cs
+
+
+def test_cluster_balances_and_every_ticket_terminal():
+    cs = _cluster(replicas=3)
+    tickets = [cs.submit("cnn", {"input": _frame(i)}) for i in range(9)]
+    assert cs.dispatched == [3, 3, 3]         # deterministic spread
+    cs.run(hyperperiods=3)
+    assert all(t.terminal for t in tickets)
+    assert all(t.status == "done" for t in tickets)
+
+
+def test_cluster_telemetry_merges_replicas():
+    cs = _cluster(replicas=2)
+    for i in range(4):
+        cs.submit("cnn", {"input": _frame(i)})
+    tel = cs.run(hyperperiods=1)
+    per = [s.monitor.checks.get("cnn", 0) for s in cs.servers]
+    assert tel["networks"]["cnn"]["checks"] == sum(per) > 0
+    assert tel["metrics"]["tickets"] == 4
+    assert tel["replicas"] == 2
+    assert sum(tel["dispatched"]) == 4
+    assert len(tel["per_replica"]) == 2
+
+
+def test_cluster_routes_around_shed_replica():
+    cs = _cluster(replicas=3)
+    cs.servers[0].register("aux", cnn.small_cnn(), period_s=1 / 25)
+    # structurally identical registration everywhere
+    for srv in cs.servers[1:]:
+        srv.register("aux", cnn.small_cnn(), period_s=1 / 25)
+    cs.servers[1].shed("aux")
+    tickets = [cs.submit("aux", {"input": _frame(i)}) for i in range(4)]
+    assert {t.replica for t in tickets} == {0, 2}
+    # fleet-wide shed: submissions still land and resolve terminally
+    cs.shed("aux")
+    t = cs.submit("aux", {"input": _frame(9)})
+    assert t.terminal and t.status == "degraded"
+
+
+def test_cluster_register_failure_is_clean_on_replica0():
+    cs = ClusterServer(HW, replicas=2, backend="numpy", num_cores=4)
+    with pytest.raises(Exception) as ei:
+        cs.register("junk", object(), period_s=1 / 10)
+    assert not isinstance(ei.value, ClusterError)   # replica 0 failed clean
+    assert "junk" not in cs.networks
+
+
+def test_cluster_save_load_roundtrip(tmp_path):
+    cs = _cluster(replicas=2)
+    path = str(tmp_path / "fleet.cluster")
+    cs.save(path)
+    cs2 = ClusterServer.load(path)
+    assert cs2.replicas == 2
+    t = cs2.submit("cnn", {"input": _frame(1)})
+    cs2.run(hyperperiods=1)
+    assert t.status == "done"
+    cs3 = ClusterServer.load(path, replicas=4)     # explicit rescale
+    assert cs3.replicas == 4
+
+
+def test_cluster_load_refuses_wrong_machine(tmp_path):
+    from repro.compiler import ArtifactError
+    cs = _cluster(replicas=2)
+    path = str(tmp_path / "fleet.cluster")
+    cs.save(path)
+    with pytest.raises(ArtifactError):
+        ClusterServer.load(path, machine=HW.with_mesh(2, 2))
+
+
+def test_cluster_load_rejects_non_cluster_dir(tmp_path):
+    with pytest.raises(ClusterError):
+        ClusterServer.load(str(tmp_path))
+
+
+def test_cluster_artifact_passes_analysis_cli(tmp_path):
+    """Acceptance: `python -m repro.analysis` exits 0 on cluster artifacts."""
+    from repro.analysis.__main__ import main
+    cs = _cluster(replicas=2)
+    path = str(tmp_path / "fleet.cluster")
+    cs.save(path)
+    assert main([path]) == 0
+    assert main(["--strict", path]) == 0
+
+
+def test_cluster_server_on_mesh_backend():
+    """The fleet composes with the mesh backend: replicas of a Server whose
+    executors run on a (1, 1) mesh (full mesh path on one device)."""
+    cs = ClusterServer(HW.with_mesh(1, 1), replicas=2, backend="mesh",
+                       num_cores=4, speed_ratio=1e6)
+    cs.register("cnn", cnn.small_cnn(), period_s=1 / 50, slots=2)
+    tickets = [cs.submit("cnn", {"input": _frame(i)}) for i in range(4)]
+    cs.run(hyperperiods=2)
+    assert all(t.status == "done" for t in tickets)

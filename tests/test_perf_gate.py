@@ -4,13 +4,17 @@ comparison logic + the committed baseline artifact's schema."""
 import json
 import pathlib
 
-from benchmarks.check_regression import (GATED_KEYS, SERVE_GATED_KEYS, check,
-                                         check_serve)
+from benchmarks.check_regression import (CLUSTER_GATED_KEYS, GATED_KEYS,
+                                         SERVE_GATED_KEYS, check,
+                                         check_cluster,
+                                         check_cluster_absolute, check_serve)
 
 BASELINE = pathlib.Path(__file__).parent.parent / "benchmarks" / \
     "baseline_executor.json"
 SERVE_BASELINE = pathlib.Path(__file__).parent.parent / "benchmarks" / \
     "baseline_serve.json"
+CLUSTER_BASELINE = pathlib.Path(__file__).parent.parent / "benchmarks" / \
+    "baseline_cluster.json"
 
 
 def _row(preset, np_s=3.0, jax_s=3.0, pallas_s=3.0):
@@ -120,6 +124,73 @@ def test_main_fails_when_serve_current_missing(tmp_path, capsys):
     assert rc == 1
     err = capsys.readouterr().err
     assert "BENCH_serve.json" in err and "gates it" in err
+
+
+def test_cluster_gate_passes_and_fails_on_speedup():
+    base = {"cluster": {"cluster_speedup_vs_single": 4.0}}
+    ok, rows = check_cluster(
+        {"cluster": {"cluster_speedup_vs_single": 2.9}}, base, 0.7)
+    assert ok and len(rows) == len(CLUSTER_GATED_KEYS)
+    ok, rows = check_cluster(
+        {"cluster": {"cluster_speedup_vs_single": 2.7}}, base, 0.7)
+    assert not ok and rows[0][-1] is False
+    # gated key missing from the candidate run: loud failure
+    ok, rows = check_cluster({"cluster": {}}, base, 0.7)
+    assert not ok and rows[0][3] is None
+    # gated key missing from the committed baseline: broken baseline
+    ok, rows = check_cluster({"cluster": {"cluster_speedup_vs_single": 4.0}},
+                             {"cluster": {}}, 0.7)
+    assert not ok and rows[0][2] is None
+    # no cluster baseline stats -> nothing gated, vacuously ok
+    ok, rows = check_cluster({"cluster": {}}, {}, 0.7)
+    assert ok and rows == []
+    # candidate run absent entirely (main() passes {}): fails, not skips
+    ok, rows = check_cluster({}, base, 0.7)
+    assert not ok and rows[0][3] is None
+
+
+def test_cluster_absolute_invariants():
+    good = {"cluster": {
+        "single": {"tickets": 16, "terminal": 16, "hi_misses": 0},
+        "cluster": {"tickets": 64, "terminal": 64, "hi_misses": 0,
+                    "dispatched": [16, 16, 16, 16]},
+    }}
+    ok, checks = check_cluster_absolute(good)
+    assert ok and len(checks) == 5
+    # any high-crit miss fails
+    bad = json.loads(json.dumps(good))
+    bad["cluster"]["cluster"]["hi_misses"] = 1
+    ok, checks = check_cluster_absolute(bad)
+    assert not ok
+    # a non-terminal ticket fails
+    bad = json.loads(json.dumps(good))
+    bad["cluster"]["single"]["terminal"] = 15
+    ok, _ = check_cluster_absolute(bad)
+    assert not ok
+    # a starved replica fails
+    bad = json.loads(json.dumps(good))
+    bad["cluster"]["cluster"]["dispatched"] = [64, 0, 0, 0]
+    ok, _ = check_cluster_absolute(bad)
+    assert not ok
+    # absent section passes vacuously (older benchmark output)
+    ok, checks = check_cluster_absolute({})
+    assert ok and checks == []
+
+
+def test_committed_cluster_baseline_schema():
+    """The committed cluster baseline must carry the gated speedup at or
+    above the acceptance floor (4 replicas >= 2x one Server), satisfy the
+    absolute invariants, and gate itself."""
+    with open(CLUSTER_BASELINE) as f:
+        baseline = json.load(f)
+    stats = baseline["cluster"]
+    for key in CLUSTER_GATED_KEYS:
+        assert float(stats[key]) > 0
+    assert stats["cluster_speedup_vs_single"] >= 2.0
+    ok, checks = check_cluster_absolute(baseline)
+    assert ok and checks
+    ok, rows = check_cluster(baseline, baseline, threshold=0.7)
+    assert ok and len(rows) == len(CLUSTER_GATED_KEYS)
 
 
 def test_committed_serve_baseline_schema():
